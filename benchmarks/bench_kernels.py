@@ -1,0 +1,68 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU: correctness +
+relative cost of ref vs fused; true perf numbers require TPU)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.rfast_update.ops import rfast_update
+from repro.kernels.ssm_scan.ops import selective_scan
+from .common import csv_row
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    P = 1 << 20
+    a = lambda *s: jnp.asarray(rng.normal(0, 1, s), jnp.float32)
+    kw = dict(x=a(P), z=a(P), g_new=a(P), g_old=a(P), v_in=a(1, P),
+              w_in=jnp.asarray([0.5]), rho_in=a(1, P), rho_buf=a(1, P),
+              mask=jnp.asarray([1.0]), rho_out=a(1, P),
+              a_out=jnp.asarray([0.5]), gamma=0.01, w_self=0.5, a_self=0.5)
+    us_ref = _time(rfast_update, **kw, impl="ref")
+    err = max(float(jnp.abs(r - p).max()) for r, p in zip(
+        rfast_update(**kw, impl="ref"), rfast_update(**kw, impl="pallas")))
+    rows.append(csv_row("kernel/rfast_update_ref_1M", us_ref,
+                        f"pallas_interp_maxerr={err:.1e}"))
+
+    q = a(1, 512, 4, 64)
+    k = a(1, 512, 2, 64)
+    v = a(1, 512, 2, 64)
+    us = _time(flash_attention, q, k, v, impl="ref")
+    err = float(jnp.abs(
+        flash_attention(q, k, v, impl="ref")
+        - flash_attention(q, k, v, impl="pallas")).max())
+    rows.append(csv_row("kernel/flash_attention_ref_512", us,
+                        f"pallas_interp_maxerr={err:.1e}"))
+
+    B, S, di, N = 1, 512, 64, 16
+    u = a(B, S, di)
+    dt = jnp.asarray(rng.uniform(1e-3, 0.1, (B, S, di)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2, (di, N)), jnp.float32)
+    Bc, Cc, D = a(B, S, N), a(B, S, N), a(di)
+    us = _time(selective_scan, u, dt, A, Bc, Cc, D, impl="ref")
+    yr, _ = selective_scan(u, dt, A, Bc, Cc, D, impl="ref")
+    yp, _ = selective_scan(u, dt, A, Bc, Cc, D, impl="pallas", chunk=128,
+                           bd=64)
+    rows.append(csv_row("kernel/ssm_scan_ref_512", us,
+                        f"pallas_interp_maxerr={float(jnp.abs(yr-yp).max()):.1e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,31 @@
+"""Fig. 4b / Table III: time-to-target-loss vs number of nodes.
+
+The paper reports near-linear scaling of time-to-loss with node count on
+the binary tree; we measure virtual time to reach a fixed mean loss.
+"""
+from __future__ import annotations
+
+from .common import (csv_row, eval_fn_for, logistic_setup,
+                     run_rfast_logistic, time_to_loss)
+
+
+def run(target: float = 0.30) -> list[str]:
+    rows = []
+    base_t = None
+    for n in (3, 7, 15):
+        prob = logistic_setup(n, batch=16)
+        # same total work budget per node => K scales with n
+        K = 2400 * n
+        state, metrics, wall = run_rfast_logistic(
+            prob, "binary_tree", K, eval_every=200)
+        t = time_to_loss(metrics, target)
+        if base_t is None:
+            base_t = t
+        rows.append(csv_row(
+            f"scaling/n{n}", wall / K * 1e6,
+            f"vtime_to_loss{target}={t:.1f};speedup_vs_n3={base_t/t:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,23 @@
+"""Fig. 4a: R-FAST convergence over five topologies (7 nodes)."""
+from __future__ import annotations
+
+from .common import csv_row, logistic_setup, run_rfast_logistic
+
+TOPOLOGIES = ["binary_tree", "line", "directed_ring", "exponential",
+              "mesh2d"]
+
+
+def run(K: int = 12_000, n: int = 7) -> list[str]:
+    prob = logistic_setup(n)
+    rows = []
+    for name in TOPOLOGIES:
+        state, metrics, wall = run_rfast_logistic(prob, name, K)
+        final = metrics[-1]
+        rows.append(csv_row(
+            f"topology/{name}", wall / K * 1e6,
+            f"loss={final['loss']:.4f};acc={final['acc']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,59 @@
+"""Shared benchmark harness: paper §VI logistic-regression setup at
+CPU-friendly scale, with virtual-time accounting for speed comparisons."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import generate_schedule, get_topology, run_rfast
+from repro.data import make_logistic_problem
+
+
+def logistic_setup(n: int, *, het: bool = True, d: int = 64, m: int = 2800,
+                   batch: int = 16, seed: int = 0):
+    prob = make_logistic_problem(n, m=m, d=d, batch=batch,
+                                 heterogeneous=het, seed=seed)
+    return prob
+
+
+def time_to_loss(metrics: list[dict], target: float) -> float:
+    """First virtual time at which mean loss <= target (inf if never)."""
+    for m in metrics:
+        if m["loss"] <= target:
+            return m["t"]
+    return float("inf")
+
+
+def eval_fn_for(prob):
+    def eval_fn(state_or_x, t):
+        x = state_or_x.x if hasattr(state_or_x, "x") else state_or_x
+        if isinstance(x, tuple):
+            x = x[0]
+        xb = jnp.asarray(x)
+        if xb.ndim == 2:
+            xb = xb.mean(0)
+        return {"loss": float(prob.mean_loss(xb)),
+                "acc": float(prob.accuracy(xb)), "t": t}
+    return eval_fn
+
+
+def run_rfast_logistic(prob, topo_name: str, K: int, *, gamma=5e-3,
+                       compute_time=None, loss_prob=0.0, seed=0,
+                       eval_every=500):
+    n = prob.n
+    topo = get_topology(topo_name, n)
+    sched = generate_schedule(topo, K, compute_time=compute_time,
+                              loss_prob=loss_prob, latency=0.3, seed=seed)
+    x0 = jnp.zeros((n, prob.p), jnp.float32)
+    t0 = time.time()
+    state, metrics = run_rfast(topo, sched, prob.grad_fn(), x0, gamma,
+                               eval_every=eval_every,
+                               eval_fn=eval_fn_for(prob), seed=seed)
+    wall = time.time() - t0
+    return state, metrics, wall
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,53 @@
+"""Benchmark suite driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus a header comment per
+section).  ``--quick`` shrinks iteration counts for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: topologies,scaling,"
+                         "straggler,packet_loss,heterogeneity,kernels")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from . import (bench_heterogeneity, bench_kernels, bench_packet_loss,
+                   bench_scaling, bench_straggler, bench_topologies)
+
+    suites = {
+        "topologies": lambda: bench_topologies.run(
+            K=4000 if args.quick else 12_000),
+        "scaling": lambda: bench_scaling.run(),
+        "straggler": lambda: bench_straggler.run(
+            rounds=400 if args.quick else 1200),
+        "packet_loss": lambda: bench_packet_loss.run(
+            K=5000 if args.quick else 14_000),
+        "heterogeneity": lambda: bench_heterogeneity.run(
+            K=4000 if args.quick else 12_000),
+        "kernels": lambda: bench_kernels.run(),
+    }
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    failed = False
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr)
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed = True
+            print(f"{name},nan,ERROR:{type(e).__name__}:{e}")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""End-to-end driver: train an LM with the production R-FAST runtime.
+
+Default is a CI-scale reduced model; pass ``--full`` to train the real
+~100M-param ``rfast-100m`` config for a few hundred steps (hours on CPU,
+minutes on real accelerators).
+
+    PYTHONPATH=src python examples/train_rfast.py                  # smoke
+    PYTHONPATH=src python examples/train_rfast.py --full --steps 300
+"""
+import argparse
+import subprocess
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--full", action="store_true")
+ap.add_argument("--steps", type=int, default=0)
+ap.add_argument("--loss-prob", type=float, default=0.1,
+                help="simulated packet loss (exercises robust tracking)")
+args = ap.parse_args()
+
+cmd = [sys.executable, "-m", "repro.launch.train",
+       "--arch", "rfast-100m",
+       "--nodes", "4", "--topology", "binary_tree",
+       "--loss-prob", str(args.loss_prob),
+       "--ckpt", "/tmp/rfast_ckpt"]
+if args.full:
+    cmd += ["--steps", str(args.steps or 300), "--seq", "512",
+            "--batch-per-node", "8", "--gamma", "1e-3"]
+else:
+    cmd += ["--reduced", "--steps", str(args.steps or 60), "--seq", "64",
+            "--batch-per-node", "2"]
+raise SystemExit(subprocess.call(cmd))

@@ -1,0 +1,71 @@
+"""npz-based pytree checkpointing with step metadata.
+
+Layout: ``<dir>/step_<N>.npz`` holding flattened leaves keyed by path, plus
+a ``_treedef`` json of the structure.  Atomic via tmp + rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+
+def _flatten_with_paths(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path) or "_root"
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    path = os.path.join(ckpt_dir, f"step_{step:010d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, _treedef=json.dumps(str(treedef)), **flat)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    finally:
+        for t in (tmp, tmp + ".npz"):
+            if os.path.exists(t):
+                os.remove(t)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, like: Any, step: int | None = None) -> Any:
+    """Restore into the structure of ``like`` (leaves replaced by saved)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}.npz")
+    with np.load(path, allow_pickle=False) as data:
+        flat = {k: data[k] for k in data.files if k != "_treedef"}
+    ref = _flatten_with_paths(like)
+    if set(ref) != set(flat):
+        missing = set(ref) ^ set(flat)
+        raise ValueError(f"checkpoint structure mismatch: {sorted(missing)[:5]}")
+    leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path_) or "_root" for path_, _ in leaves_ref]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), [flat[k] for k in keys])

@@ -1,0 +1,37 @@
+"""Assigned-architecture registry: ``get_config(arch_id)``.
+
+Every config cites its source in its module docstring and carries the
+exact dimensions from the assignment table.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "whisper-large-v3",
+    "olmo-1b",
+    "phi3.5-moe-42b-a6.6b",
+    "pixtral-12b",
+    "falcon-mamba-7b",
+    "qwen2.5-3b",
+    "llama3-8b",
+    "hymba-1.5b",
+    "deepseek-7b",
+    "deepseek-v2-236b",
+    "rfast-100m",          # the paper-scale LM used by the e2e example
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; have {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.get_config()
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

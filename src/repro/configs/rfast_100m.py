@@ -1,0 +1,19 @@
+"""rfast-100m — the ~100M-param LM used by the end-to-end R-FAST training
+driver (examples/train_rfast.py).  Llama-style dense decoder.
+"""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="rfast-100m",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=4,
+        d_ff=2048,
+        vocab=32000,
+        mixer="attn",
+        mlp="swiglu",
+        norm="rmsnorm",
+    )

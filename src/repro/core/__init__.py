@@ -1,0 +1,12 @@
+"""R-FAST core: topology, schedules, the global-view simulator, baselines,
+and the production shard_map runtime."""
+from .topology import (  # noqa: F401
+    Topology, get_topology, binary_tree, line, directed_ring,
+    undirected_ring, exponential, mesh2d, parameter_server, TOPOLOGIES,
+    validate_weights, spanning_tree_roots, common_roots,
+)
+from .schedule import Schedule, generate_schedule, round_robin_schedule  # noqa: F401
+from .simulator import (  # noqa: F401
+    RFASTState, init_state, rfast_scan, run_rfast, tracked_mass,
+)
+from . import baselines  # noqa: F401

@@ -1,0 +1,319 @@
+"""Baseline algorithms the paper compares against (Table II / Fig. 5-6).
+
+Synchronous: Ring-AllReduce SGD [12], D-PSGD [14], S-AB [17] (two-matrix
+synchronous gradient tracking — the synchronous push-pull recursion (2)),
+plus ``push_pull_sync`` itself (eq. (2), the deterministic ancestor of
+R-FAST).
+
+Asynchronous: AD-PSGD [22] (atomic pairwise averaging + stale gradients)
+and OSGP [23] (overlap stochastic gradient push: push-sum with mailbox
+accumulation and non-blocking sends).
+
+All baselines share the simulator's ``grad_fn(node, x, key)`` interface and
+a **virtual-time model** so that time-to-loss comparisons under stragglers
+are meaningful: synchronous rounds cost ``max_i compute_i`` (barrier),
+asynchronous events follow each node's own clock.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .topology import Topology
+
+GradFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+__all__ = [
+    "sync_round_times",
+    "run_push_pull_sync",
+    "run_ring_allreduce",
+    "run_dpsgd",
+    "run_sab",
+    "run_adpsgd",
+    "run_osgp",
+    "metropolis_weights",
+]
+
+
+# --------------------------------------------------------------------- #
+# virtual time for synchronous rounds
+# --------------------------------------------------------------------- #
+def sync_round_times(
+    compute_time: np.ndarray,
+    rounds: int,
+    *,
+    jitter: float = 0.2,
+    comm: float = 0.1,
+    seed: int = 0,
+) -> np.ndarray:
+    """Cumulative virtual time of synchronous rounds (barrier = max)."""
+    rng = np.random.default_rng(seed)
+    n = len(compute_time)
+    per = compute_time[None, :] * (1.0 + rng.uniform(-jitter, jitter, (rounds, n)))
+    return np.cumsum(per.max(axis=1) + comm)
+
+
+def metropolis_weights(topo: Topology) -> np.ndarray:
+    """Doubly-stochastic weights for an undirected graph (D-PSGD)."""
+    n = topo.n
+    adj = ((topo.W > 0) | (topo.W.T > 0)) & ~np.eye(n, dtype=bool)
+    deg = adj.sum(axis=1)
+    Wm = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            if adj[i, j]:
+                Wm[i, j] = 1.0 / (1 + max(deg[i], deg[j]))
+        Wm[i, i] = 1.0 - Wm[i].sum()
+    return Wm
+
+
+def _vgrads(grad_fn: GradFn, x: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    n = x.shape[0]
+    keys = jax.random.split(key, n)
+    return jax.vmap(grad_fn)(jnp.arange(n), x, keys)
+
+
+# --------------------------------------------------------------------- #
+# synchronous baselines
+# --------------------------------------------------------------------- #
+def _run_rounds(round_fn, carry, rounds: int, seed: int,
+                eval_every: int, eval_fn, times: np.ndarray):
+    key = jax.random.PRNGKey(seed)
+    metrics: list[dict] = []
+    jfn = jax.jit(round_fn)
+    for t in range(rounds):
+        key, sub = jax.random.split(key)
+        carry = jfn(carry, sub)
+        if eval_fn is not None and (t + 1) % eval_every == 0:
+            m = eval_fn(carry, float(times[t]))
+            m["round"] = t + 1
+            metrics.append(m)
+    return carry, metrics
+
+
+def run_push_pull_sync(
+    topo: Topology, grad_fn: GradFn, x0: jnp.ndarray, gamma: float,
+    rounds: int, *, seed: int = 0, eval_every: int = 10,
+    eval_fn=None, times: np.ndarray | None = None,
+):
+    """Synchronous push-pull (eq. 2): the paper's S-AB-style ancestor.
+
+    x^{t+1} = W (x^t − γ z^t);  z^{t+1} = A z^t + ∇F(x^{t+1}) − ∇F(x^t).
+    """
+    n = topo.n
+    W = jnp.asarray(topo.W, jnp.float32)
+    A = jnp.asarray(topo.A, jnp.float32)
+    x0 = jnp.asarray(x0, jnp.float32)
+    if x0.ndim == 1:
+        x0 = jnp.tile(x0[None], (n, 1))
+    g0 = _vgrads(grad_fn, x0, jax.random.PRNGKey(seed + 1))
+    if times is None:
+        times = np.arange(1, rounds + 1, dtype=np.float64)
+
+    def round_fn(carry, key):
+        x, z, g = carry
+        x_new = W @ (x - gamma * z)
+        g_new = _vgrads(grad_fn, x_new, key)
+        z_new = A @ z + g_new - g
+        return (x_new, z_new, g_new)
+
+    carry, metrics = _run_rounds(round_fn, (x0, g0, g0), rounds, seed,
+                                 eval_every, eval_fn, times)
+    return carry[0], metrics
+
+
+def run_sab(topo: Topology, grad_fn: GradFn, x0, gamma, rounds, **kw):
+    """S-AB [17]: synchronous stochastic gradient tracking with a
+    row-stochastic and a column-stochastic matrix — identical recursion to
+    synchronous push-pull over a strongly-connected digraph."""
+    return run_push_pull_sync(topo, grad_fn, x0, gamma, rounds, **kw)
+
+
+def run_ring_allreduce(
+    n: int, grad_fn: GradFn, x0: jnp.ndarray, gamma: float, rounds: int,
+    *, seed: int = 0, eval_every: int = 10, eval_fn=None,
+    times: np.ndarray | None = None,
+):
+    """Ring-AllReduce SGD: exact gradient average per round (single model)."""
+    x0 = jnp.asarray(x0, jnp.float32)
+    if x0.ndim == 2:
+        x0 = x0[0]
+    if times is None:
+        times = np.arange(1, rounds + 1, dtype=np.float64)
+
+    def round_fn(x, key):
+        g = _vgrads(grad_fn, jnp.tile(x[None], (n, 1)), key)
+        return x - gamma * g.mean(axis=0)
+
+    x, metrics = _run_rounds(round_fn, x0, rounds, seed, eval_every,
+                             eval_fn, times)
+    return x, metrics
+
+
+def run_dpsgd(
+    topo: Topology, grad_fn: GradFn, x0: jnp.ndarray, gamma: float,
+    rounds: int, *, seed: int = 0, eval_every: int = 10, eval_fn=None,
+    times: np.ndarray | None = None,
+):
+    """D-PSGD [14]: x^{t+1} = W̄ x^t − γ ∇F(x^t), W̄ doubly stochastic."""
+    n = topo.n
+    Wm = jnp.asarray(metropolis_weights(topo), jnp.float32)
+    x0 = jnp.asarray(x0, jnp.float32)
+    if x0.ndim == 1:
+        x0 = jnp.tile(x0[None], (n, 1))
+    if times is None:
+        times = np.arange(1, rounds + 1, dtype=np.float64)
+
+    def round_fn(x, key):
+        g = _vgrads(grad_fn, x, key)
+        return Wm @ x - gamma * g
+
+    x, metrics = _run_rounds(round_fn, x0, rounds, seed, eval_every,
+                             eval_fn, times)
+    return x, metrics
+
+
+# --------------------------------------------------------------------- #
+# asynchronous baselines (event-driven jax scans)
+# --------------------------------------------------------------------- #
+def _async_events(n: int, K: int, compute_time, jitter, seed):
+    rng = np.random.default_rng(seed)
+    compute_time = np.asarray(compute_time, np.float64)
+    clocks = rng.uniform(0, 1, n) * compute_time
+    agent = np.zeros(K, np.int32)
+    times = np.zeros(K)
+    for k in range(K):
+        a = int(np.argmin(clocks))
+        agent[k] = a
+        times[k] = clocks[a]
+        clocks[a] += compute_time[a] * (1 + rng.uniform(-jitter, jitter))
+    return agent, times
+
+
+def run_adpsgd(
+    topo: Topology, grad_fn: GradFn, x0: jnp.ndarray, gamma: float, K: int,
+    *, compute_time=None, jitter: float = 0.2, staleness: int = 2,
+    loss_prob: float = 0.0, seed: int = 0, eval_every: int = 0, eval_fn=None,
+):
+    """AD-PSGD [22]: event-driven atomic pairwise averaging + stale grads.
+
+    Active node a picks a random (undirected) neighbour b, atomically
+    averages x_a, x_b, then applies a gradient computed at a's model from
+    ``staleness`` events ago.  Packet loss => the averaging step is skipped
+    (partial mixing), the descent still happens.
+    """
+    n = topo.n
+    rng = np.random.default_rng(seed + 7)
+    if compute_time is None:
+        compute_time = np.ones(n)
+    agent, times = _async_events(n, K, compute_time, jitter, seed)
+    nbrs = {i: sorted(set(topo.in_neighbors_W(i) + topo.out_neighbors_W(i)))
+            for i in range(n)}
+    partner = np.array([nbrs[a][rng.integers(len(nbrs[a]))] if nbrs[a] else a
+                        for a in agent], np.int32)
+    mixed = (rng.uniform(size=K) >= loss_prob)
+
+    x0 = jnp.asarray(x0, jnp.float32)
+    if x0.ndim == 1:
+        x0 = jnp.tile(x0[None], (n, 1))
+    H = staleness + 1
+    x_hist0 = jnp.tile(x0[None], (H, 1, 1))
+
+    def step(carry, inp):
+        x, x_hist, k = carry
+        a, b, mix, key = inp
+        avg = 0.5 * (x[a] + x[b])
+        x_a = jnp.where(mix, avg, x[a])
+        x_b = jnp.where(mix, avg, x[b])
+        g = grad_fn(a, x_hist[k % H, a], key)
+        x = x.at[b].set(x_b).at[a].set(x_a - gamma * g)
+        x_hist = x_hist.at[(k + 1) % H].set(x)
+        return (x, x_hist, k + 1), None
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), K)
+    chunk = jax.jit(lambda c, a, b, m, ks: jax.lax.scan(
+        step, c, (a, b, m, ks))[0])
+    carry = (x0, x_hist0, jnp.zeros((), jnp.int32))
+    metrics: list[dict] = []
+    ee = eval_every if eval_every > 0 else K
+    agent_j, partner_j = jnp.asarray(agent), jnp.asarray(partner)
+    mixed_j = jnp.asarray(mixed)
+    for s in range(0, K, ee):
+        e = min(K, s + ee)
+        carry = chunk(carry, agent_j[s:e], partner_j[s:e], mixed_j[s:e],
+                      keys[s:e])
+        if eval_fn is not None:
+            m = eval_fn(carry[0], float(times[e - 1]))
+            m["k"] = e
+            metrics.append(m)
+    return carry[0], metrics
+
+
+def run_osgp(
+    topo: Topology, grad_fn: GradFn, x0: jnp.ndarray, gamma: float, K: int,
+    *, compute_time=None, jitter: float = 0.2, loss_prob: float = 0.0,
+    seed: int = 0, eval_every: int = 0, eval_fn=None,
+):
+    """OSGP [23]: overlap stochastic gradient push (async push-sum).
+
+    Node state (x_i, w_i).  On wake: consume mailbox mass, de-bias
+    ẑ = x/w, descend, then push column-stochastic shares to out-neighbour
+    mailboxes (non-blocking).  Lost packets lose mass — the robustness gap
+    R-FAST's running sums close.
+    """
+    n = topo.n
+    if compute_time is None:
+        compute_time = np.ones(n)
+    agent, times = _async_events(n, K, compute_time, jitter, seed)
+    A = jnp.asarray(topo.A, jnp.float32)           # column-stochastic
+    rng = np.random.default_rng(seed + 13)
+    # per-event, per-row loss mask for the pushes of the active node
+    lost = (rng.uniform(size=(K, n)) < loss_prob)
+
+    x0 = jnp.asarray(x0, jnp.float32)
+    if x0.ndim == 1:
+        x0 = jnp.tile(x0[None], (n, 1))
+
+    def step(carry, inp):
+        x, w, mail_x, mail_w = carry
+        a, drop, key = inp
+        # consume mailbox
+        x_a = x[a] + mail_x[a]
+        w_a = w[a] + mail_w[a]
+        mail_x = mail_x.at[a].set(0.0)
+        mail_w = mail_w.at[a].set(0.0)
+        # de-biased gradient step
+        g = grad_fn(a, x_a / jnp.maximum(w_a, 1e-8), key)
+        x_a = x_a - gamma * w_a * g
+        # push shares
+        col = A[:, a]                                 # (n,)
+        keep = col[a]
+        others = col.at[a].set(0.0)
+        ok = (~drop).astype(x_a.dtype)                # (n,)
+        mail_x = mail_x + (others * ok)[:, None] * x_a[None, :]
+        mail_w = mail_w + others * ok * w_a
+        x = x.at[a].set(keep * x_a)
+        w = w.at[a].set(keep * w_a)
+        return (x, w, mail_x, mail_w), None
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), K)
+    chunk = jax.jit(lambda c, a, d, ks: jax.lax.scan(step, c, (a, d, ks))[0])
+    carry = (x0, jnp.ones(n, jnp.float32), jnp.zeros_like(x0),
+             jnp.zeros(n, jnp.float32))
+    metrics: list[dict] = []
+    ee = eval_every if eval_every > 0 else K
+    agent_j, lost_j = jnp.asarray(agent), jnp.asarray(lost)
+    for s in range(0, K, ee):
+        e = min(K, s + ee)
+        carry = chunk(carry, agent_j[s:e], lost_j[s:e], keys[s:e])
+        if eval_fn is not None:
+            x, w = carry[0], carry[1]
+            xd = x / jnp.maximum(w[:, None], 1e-8)
+            m = eval_fn(xd, float(times[e - 1]))
+            m["k"] = e
+            metrics.append(m)
+    return carry[0] / jnp.maximum(carry[1][:, None], 1e-8), metrics

@@ -1,0 +1,223 @@
+"""Asynchronous event-schedule generation for the global-view simulator.
+
+The global view (Algorithm 2) consumes, at every global iteration ``k``:
+
+* ``agent[k]``      — the node that wakes up (``i^k``),
+* ``stamp_v[k, e]`` — for every W-edge ``e=(j→i)``, the *global stamp* of the
+  ``v_j`` payload available to the receiver (``k - d_{v,j}^k`` in the paper),
+* ``stamp_rho[k, e]`` — ditto for ρ payloads on A-edges.
+
+Stamps are produced by an explicit network simulation with virtual clocks:
+every node has a compute-time distribution (stragglers = slower clocks),
+every edge has a latency distribution and a Bernoulli loss probability.
+Packets carry the sender's post-update stamp; the receiver always consumes
+the *largest stamp delivered so far* (the paper's ``τ`` semantics), which
+makes per-edge stamps monotone.  A hard bound ``D_max`` enforces
+Assumption 3(ii): if loss/latency would push staleness beyond ``D_max``
+iterations, delivery is forced (the paper's model also excludes infinitely
+persistent loss).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .topology import Topology
+
+__all__ = ["Schedule", "generate_schedule", "round_robin_schedule"]
+
+
+@dataclasses.dataclass
+class Schedule:
+    """Realized asynchronous schedule over K global iterations."""
+
+    agent: np.ndarray       # (K,) int32
+    stamp_v: np.ndarray     # (K, E_W) int32, payload stamp per W-edge
+    stamp_rho: np.ndarray   # (K, E_A) int32, payload stamp per A-edge
+    times: np.ndarray       # (K,) float64 — virtual completion time of event k
+    D: int                  # realized max delay bound (for history sizing)
+    T: int                  # realized activation-gap bound
+
+    @property
+    def K(self) -> int:
+        return int(self.agent.shape[0])
+
+    def local_counters(self, n: int) -> np.ndarray:
+        """t_i^k for bookkeeping: number of updates of each node up to k."""
+        counts = np.zeros((self.K, n), dtype=np.int64)
+        c = np.zeros(n, dtype=np.int64)
+        for k, a in enumerate(self.agent):
+            c[a] += 1
+            counts[k] = c
+        return counts
+
+
+def _realized_T(agent: np.ndarray, n: int) -> int:
+    """Smallest T such that every window of T events touches every node."""
+    last_seen = -np.ones(n, dtype=np.int64)
+    gap = 0
+    for k, a in enumerate(agent):
+        last_seen[a] = k
+        if np.all(last_seen >= 0):
+            gap = max(gap, k - int(last_seen.min()))
+    return int(gap + 1)
+
+
+def generate_schedule(
+    topo: Topology,
+    K: int,
+    *,
+    compute_time: np.ndarray | list[float] | None = None,
+    jitter: float = 0.2,
+    latency: float = 0.1,
+    loss_prob: float = 0.0,
+    D_max: int | None = None,
+    seed: int = 0,
+    failures: list[tuple[int, float, float]] | None = None,
+) -> Schedule:
+    """Simulate virtual clocks + network to produce a Schedule.
+
+    Args:
+      compute_time: per-node mean compute time (straggler = large value);
+        defaults to all-ones.
+      jitter: multiplicative uniform jitter on each compute interval.
+      latency: mean network latency per packet, in compute-time units.
+      loss_prob: per-packet Bernoulli loss probability.
+      D_max: hard staleness bound (Assumption 3ii); defaults to 4 * n + 16.
+      failures: (node, t_start, t_end) downtime windows — the node does
+        not wake up inside the window (crash + recovery).  Bounded
+        downtime keeps Assumption 3 satisfied with a larger realized T;
+        the ρ running sums deliver the accumulated mass on recovery.
+    """
+    rng = np.random.default_rng(seed)
+    n = topo.n
+    if compute_time is None:
+        compute_time = np.ones(n)
+    compute_time = np.asarray(compute_time, dtype=np.float64)
+    if D_max is None:
+        D_max = 4 * n + 16
+
+    edges_w = topo.edges_W()
+    edges_a = topo.edges_A()
+    out_w = {i: [] for i in range(n)}
+    out_a = {i: [] for i in range(n)}
+    in_w = {i: [] for i in range(n)}
+    in_a = {i: [] for i in range(n)}
+    for e, (j, i) in enumerate(edges_w):
+        out_w[j].append(e)
+        in_w[i].append(e)
+    for e, (j, i) in enumerate(edges_a):
+        out_a[j].append(e)
+        in_a[i].append(e)
+
+    # per-edge arrival queues: list of (arrival_time, stamp); consumed in
+    # stamp order (non-FIFO arrival is allowed — we take max stamp arrived).
+    arrivals_w: list[list[tuple[float, int]]] = [[] for _ in edges_w]
+    arrivals_a: list[list[tuple[float, int]]] = [[] for _ in edges_a]
+    best_w = np.zeros(len(edges_w), dtype=np.int64)   # largest stamp delivered
+    best_a = np.zeros(len(edges_a), dtype=np.int64)
+
+    clocks = rng.uniform(0.0, 1.0, n) * compute_time
+    # crash windows: push the node's next wake-up past the recovery time
+    for (fn_, t0_, t1_) in (failures or []):
+        if clocks[fn_] >= t0_:
+            clocks[fn_] = max(clocks[fn_], t1_)
+    agent = np.zeros(K, dtype=np.int32)
+    stamp_v = np.zeros((K, max(1, len(edges_w))), dtype=np.int32)
+    stamp_rho = np.zeros((K, max(1, len(edges_a))), dtype=np.int32)
+    times = np.zeros(K, dtype=np.float64)
+    max_delay = 0
+
+    for k in range(K):
+        a = int(np.argmin(clocks))
+        now = float(clocks[a])
+        agent[k] = a
+        times[k] = now
+
+        # -- consume: advance best stamp per in-edge from arrived packets --
+        for e in in_w[a]:
+            q = arrivals_w[e]
+            keep = []
+            for (t_arr, s) in q:
+                if t_arr <= now:
+                    if s > best_w[e]:
+                        best_w[e] = s
+                else:
+                    keep.append((t_arr, s))
+            arrivals_w[e][:] = keep
+            # Assumption 3(ii) hard bound
+            if k - best_w[e] > D_max:
+                best_w[e] = k - D_max
+        for e in in_a[a]:
+            q = arrivals_a[e]
+            keep = []
+            for (t_arr, s) in q:
+                if t_arr <= now:
+                    if s > best_a[e]:
+                        best_a[e] = s
+                else:
+                    keep.append((t_arr, s))
+            arrivals_a[e][:] = keep
+            if k - best_a[e] > D_max:
+                best_a[e] = k - D_max
+
+        stamp_v[k] = best_w if len(edges_w) else 0
+        stamp_rho[k] = best_a if len(edges_a) else 0
+        for e in in_w[a]:
+            max_delay = max(max_delay, k - int(best_w[e]))
+        for e in in_a[a]:
+            max_delay = max(max_delay, k - int(best_a[e]))
+
+        # -- send: node a finishes local iteration k, emits stamp k+1 ------
+        for e in out_w[a] + []:
+            if rng.uniform() >= loss_prob:
+                arrivals_w[e].append((now + rng.exponential(latency), k + 1))
+        for e in out_a[a]:
+            if rng.uniform() >= loss_prob:
+                arrivals_a[e].append((now + rng.exponential(latency), k + 1))
+
+        clocks[a] = now + compute_time[a] * (1.0 + rng.uniform(-jitter, jitter))
+        for (fn_, t0_, t1_) in (failures or []):
+            if fn_ == a and t0_ <= clocks[a] < t1_:
+                clocks[a] = t1_     # crash: sleep through the window
+
+    return Schedule(
+        agent=agent,
+        stamp_v=stamp_v,
+        stamp_rho=stamp_rho,
+        times=times,
+        D=int(max(1, max_delay)),
+        T=_realized_T(agent, n),
+    )
+
+
+def round_robin_schedule(topo: Topology, n_rounds: int) -> Schedule:
+    """Remark 2: the synchronous counterpart as a global-view schedule.
+
+    ``i^k = k mod n``; at its local iteration ``t`` (global ``k = t·n + i``)
+    node ``i`` consumes neighbour ``j``'s payload with local stamp ``t``,
+    i.e. global stamp ``(t-1)·n + j + 1`` (0 for t = 0).  Realized delay is
+    ``n + i - j - 1 ≤ 2n - 2`` exactly as the paper computes.
+    """
+    n = topo.n
+    K = n_rounds * n
+    edges_w = topo.edges_W()
+    edges_a = topo.edges_A()
+    agent = np.arange(K, dtype=np.int32) % n
+    stamp_v = np.zeros((K, max(1, len(edges_w))), dtype=np.int32)
+    stamp_rho = np.zeros((K, max(1, len(edges_a))), dtype=np.int32)
+    for k in range(K):
+        t = k // n
+        for e, (j, _i) in enumerate(edges_w):
+            stamp_v[k, e] = 0 if t == 0 else (t - 1) * n + j + 1
+        for e, (j, _i) in enumerate(edges_a):
+            stamp_rho[k, e] = 0 if t == 0 else (t - 1) * n + j + 1
+    return Schedule(
+        agent=agent,
+        stamp_v=stamp_v,
+        stamp_rho=stamp_rho,
+        times=np.arange(K, dtype=np.float64) / n,
+        D=max(1, 2 * n - 2),
+        T=n,
+    )

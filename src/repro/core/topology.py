@@ -1,0 +1,278 @@
+"""Communication topologies and weight matrices for R-FAST.
+
+R-FAST communicates over two digraphs induced by weight matrices:
+
+* ``W`` — **row-stochastic** (pull / consensus graph ``G(W)``).  Node ``i``
+  pulls ``v_j`` from in-neighbours ``j`` with ``W[i, j] > 0``.
+* ``A`` — **column-stochastic** (push / gradient-tracking graph ``G(A)``).
+  Node ``i`` pushes scaled ``z`` mass to out-neighbours ``j`` with
+  ``A[j, i] > 0``.
+
+Assumption 1: positive diagonals, nonzero entries bounded below.
+Assumption 2: ``G(W)`` and ``G(A)^T`` each contain a spanning tree, and at
+least one pair of spanning trees shares a common root.
+
+The convention throughout: an edge ``(j, i)`` means *j sends to i*; in
+matrix form ``M[i, j] > 0``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+__all__ = [
+    "Topology",
+    "binary_tree",
+    "line",
+    "directed_ring",
+    "exponential",
+    "mesh2d",
+    "parameter_server",
+    "undirected_ring",
+    "validate_weights",
+    "spanning_tree_roots",
+    "common_roots",
+    "TOPOLOGIES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A pair of weight matrices + metadata describing the comm graphs."""
+
+    name: str
+    n: int
+    W: np.ndarray  # (n, n) row-stochastic, pull graph
+    A: np.ndarray  # (n, n) column-stochastic, push graph
+
+    # ------------------------------------------------------------------ #
+    def __post_init__(self) -> None:
+        validate_weights(self.W, self.A)
+
+    # -- edge sets (excluding self-loops) ------------------------------- #
+    def edges_W(self) -> list[tuple[int, int]]:
+        """Edges (j, i): j sends v to i over G(W)."""
+        return [(j, i) for i in range(self.n) for j in range(self.n)
+                if i != j and self.W[i, j] > 0]
+
+    def edges_A(self) -> list[tuple[int, int]]:
+        """Edges (j, i): j pushes rho to i over G(A)."""
+        return [(j, i) for i in range(self.n) for j in range(self.n)
+                if i != j and self.A[i, j] > 0]
+
+    def in_neighbors_W(self, i: int) -> list[int]:
+        return [j for j in range(self.n) if j != i and self.W[i, j] > 0]
+
+    def in_neighbors_A(self, i: int) -> list[int]:
+        return [j for j in range(self.n) if j != i and self.A[i, j] > 0]
+
+    def out_neighbors_W(self, i: int) -> list[int]:
+        return [j for j in range(self.n) if j != i and self.W[j, i] > 0]
+
+    def out_neighbors_A(self, i: int) -> list[int]:
+        return [j for j in range(self.n) if j != i and self.A[j, i] > 0]
+
+    def roots(self) -> list[int]:
+        """Common roots R = R_W ∩ R_{A^T} (Assumption 2)."""
+        return common_roots(self.W, self.A)
+
+    @property
+    def max_in_degree(self) -> int:
+        deg_w = max(len(self.in_neighbors_W(i)) for i in range(self.n))
+        deg_a = max(len(self.in_neighbors_A(i)) for i in range(self.n))
+        return max(deg_w, deg_a)
+
+
+# ---------------------------------------------------------------------- #
+# validation helpers
+# ---------------------------------------------------------------------- #
+def validate_weights(W: np.ndarray, A: np.ndarray, atol: float = 1e-8) -> None:
+    """Assumption 1 + 2 checks.  Raises ValueError on violation."""
+    n = W.shape[0]
+    if W.shape != (n, n) or A.shape != (n, n):
+        raise ValueError("W and A must be square with matching size")
+    if np.any(W < 0) or np.any(A < 0):
+        raise ValueError("weights must be non-negative")
+    if np.any(np.diag(W) <= 0) or np.any(np.diag(A) <= 0):
+        raise ValueError("Assumption 1(i): diagonals must be positive")
+    if not np.allclose(W.sum(axis=1), 1.0, atol=atol):
+        raise ValueError("Assumption 1(ii): W must be row-stochastic")
+    if not np.allclose(A.sum(axis=0), 1.0, atol=atol):
+        raise ValueError("Assumption 1(ii): A must be column-stochastic")
+    if not common_roots(W, A):
+        raise ValueError("Assumption 2: G(W) and G(A^T) must share a root")
+
+
+def _reachable_from(adj: np.ndarray, root: int) -> set[int]:
+    """Nodes reachable from ``root`` following edges adj[i, j]>0 : j -> i."""
+    n = adj.shape[0]
+    seen = {root}
+    stack = [root]
+    while stack:
+        u = stack.pop()
+        for v in range(n):
+            # u -> v exists iff adj[v, u] > 0
+            if adj[v, u] > 0 and v not in seen:
+                seen.add(v)
+                stack.append(v)
+    return seen
+
+
+def spanning_tree_roots(M: np.ndarray) -> list[int]:
+    """Roots r such that every node is reachable from r in G(M).
+
+    ``G(M)`` has edge j -> i iff ``M[i, j] > 0`` (information flows j to i).
+    """
+    n = M.shape[0]
+    return [r for r in range(n) if len(_reachable_from(M, r)) == n]
+
+
+def common_roots(W: np.ndarray, A: np.ndarray) -> list[int]:
+    """R = R_W ∩ R_{A^T}: roots of spanning trees of G(W) and G(A^T)."""
+    r_w = set(spanning_tree_roots(W))
+    # G(A^T) has edge j->i iff A^T[i,j] = A[j,i] > 0, i.e. reversed push graph
+    r_at = set(spanning_tree_roots(A.T))
+    return sorted(r_w & r_at)
+
+
+# ---------------------------------------------------------------------- #
+# weight-matrix builders
+# ---------------------------------------------------------------------- #
+def _row_stochastic_from_in_edges(n: int, in_edges: dict[int, list[int]]) -> np.ndarray:
+    """Uniform row-stochastic W given each node's in-neighbour list."""
+    W = np.zeros((n, n))
+    for i in range(n):
+        nbrs = sorted(set(in_edges.get(i, [])) - {i})
+        w = 1.0 / (len(nbrs) + 1)
+        W[i, i] = w
+        for j in nbrs:
+            W[i, j] = w
+    return W
+
+
+def _col_stochastic_from_out_edges(n: int, out_edges: dict[int, list[int]]) -> np.ndarray:
+    """Uniform column-stochastic A given each node's out-neighbour list."""
+    A = np.zeros((n, n))
+    for i in range(n):
+        nbrs = sorted(set(out_edges.get(i, [])) - {i})
+        a = 1.0 / (len(nbrs) + 1)
+        A[i, i] = a
+        for j in nbrs:
+            A[j, i] = a
+    return A
+
+
+def _tree_topology(name: str, n: int, parent: list[int | None]) -> Topology:
+    """Build (W, A) from a rooted tree given parent pointers.
+
+    G(W) = tree oriented root -> leaves (each node pulls from its parent).
+    G(A) = reversed tree (each node pushes to its parent), so G(A^T) equals
+    G(W) and the tree root is the common root (Fig. 1 construction).
+    """
+    in_w: dict[int, list[int]] = {}
+    out_a: dict[int, list[int]] = {}
+    for i, p in enumerate(parent):
+        if p is None:
+            continue
+        in_w.setdefault(i, []).append(p)   # i pulls v from parent
+        out_a.setdefault(i, []).append(p)  # i pushes rho to parent
+    W = _row_stochastic_from_in_edges(n, in_w)
+    A = _col_stochastic_from_out_edges(n, out_a)
+    return Topology(name, n, W, A)
+
+
+def binary_tree(n: int) -> Topology:
+    """Complete-ish binary tree rooted at node 0 (Fig. 3a)."""
+    parent: list[int | None] = [None] + [(i - 1) // 2 for i in range(1, n)]
+    return _tree_topology(f"binary_tree_{n}", n, parent)
+
+
+def line(n: int) -> Topology:
+    """Line graph 0 - 1 - ... - n-1 rooted at 0 (Fig. 3c)."""
+    parent: list[int | None] = [None] + list(range(n - 1))
+    return _tree_topology(f"line_{n}", n, parent)
+
+
+def parameter_server(n: int, n_servers: int = 1) -> Topology:
+    """Star / PS structure: servers 0..n_servers-1 as common roots."""
+    in_w: dict[int, list[int]] = {}
+    out_a: dict[int, list[int]] = {}
+    servers = list(range(n_servers))
+    # servers form a ring among themselves (if >1) and broadcast to workers
+    for s in servers:
+        if n_servers > 1:
+            in_w.setdefault(s, []).append(servers[(s - 1) % n_servers])
+            out_a.setdefault(s, []).append(servers[(s + 1) % n_servers])
+    for wk in range(n_servers, n):
+        s = servers[wk % n_servers]
+        in_w.setdefault(wk, []).append(s)   # worker pulls model from server
+        out_a.setdefault(wk, []).append(s)  # worker pushes grads to server
+    W = _row_stochastic_from_in_edges(n, in_w)
+    A = _col_stochastic_from_out_edges(n, out_a)
+    return Topology(f"ps_{n}_{n_servers}", n, W, A)
+
+
+def directed_ring(n: int) -> Topology:
+    """Directed ring i -> i+1 (mod n) for both graphs (Fig. 3b)."""
+    in_edges = {i: [(i - 1) % n] for i in range(n)}
+    out_edges = {i: [(i + 1) % n] for i in range(n)}
+    W = _row_stochastic_from_in_edges(n, in_edges)
+    A = _col_stochastic_from_out_edges(n, out_edges)
+    return Topology(f"directed_ring_{n}", n, W, A)
+
+
+def undirected_ring(n: int) -> Topology:
+    """Symmetric ring (both directions) — used by D-PSGD/AD-PSGD baselines."""
+    in_edges = {i: [(i - 1) % n, (i + 1) % n] for i in range(n)}
+    W = _row_stochastic_from_in_edges(n, in_edges)
+    A = _col_stochastic_from_out_edges(n, in_edges)
+    return Topology(f"undirected_ring_{n}", n, W, A)
+
+
+def exponential(n: int) -> Topology:
+    """Directed exponential graph: i -> (i + 2^k) mod n."""
+    hops = [2 ** k for k in range(max(1, int(np.ceil(np.log2(n)))))]
+    in_edges = {i: sorted({(i - h) % n for h in hops} - {i}) for i in range(n)}
+    out_edges = {i: sorted({(i + h) % n for h in hops} - {i}) for i in range(n)}
+    W = _row_stochastic_from_in_edges(n, in_edges)
+    A = _col_stochastic_from_out_edges(n, out_edges)
+    return Topology(f"exponential_{n}", n, W, A)
+
+
+def mesh2d(n: int) -> Topology:
+    """2-D grid (4-neighbour, undirected) topology."""
+    rows = int(np.floor(np.sqrt(n)))
+    while n % rows:
+        rows -= 1
+    cols = n // rows
+    def nid(r: int, c: int) -> int:
+        return r * cols + c
+    in_edges: dict[int, list[int]] = {i: [] for i in range(n)}
+    for r in range(rows):
+        for c in range(cols):
+            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                rr, cc = r + dr, c + dc
+                if 0 <= rr < rows and 0 <= cc < cols:
+                    in_edges[nid(r, c)].append(nid(rr, cc))
+    W = _row_stochastic_from_in_edges(n, in_edges)
+    A = _col_stochastic_from_out_edges(n, in_edges)
+    return Topology(f"mesh2d_{n}", n, W, A)
+
+
+TOPOLOGIES: dict[str, Callable[[int], Topology]] = {
+    "binary_tree": binary_tree,
+    "line": line,
+    "directed_ring": directed_ring,
+    "undirected_ring": undirected_ring,
+    "exponential": exponential,
+    "mesh2d": mesh2d,
+    "parameter_server": parameter_server,
+}
+
+
+def get_topology(name: str, n: int) -> Topology:
+    if name not in TOPOLOGIES:
+        raise KeyError(f"unknown topology {name!r}; have {sorted(TOPOLOGIES)}")
+    return TOPOLOGIES[name](n)

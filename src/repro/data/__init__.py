@@ -1,0 +1,2 @@
+from .synthetic import logistic_dataset, partition, token_stream  # noqa: F401
+from .objectives import LogisticProblem, make_logistic_problem  # noqa: F401

@@ -1,0 +1,115 @@
+"""Objectives with the simulator's ``grad_fn(node, x, key)`` interface.
+
+The primary one is the paper's §VI-A regularized logistic regression
+(smooth and strongly convex thanks to the L2 term).  A generic adapter
+wraps any flat-parameter model loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LogisticProblem", "make_logistic_problem"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LogisticProblem:
+    """Regularized logistic regression over n node-local shards.
+
+    Parameter layout: x = [w (d,), b ()] -> p = d + 1.
+    Local objective:  f_i(x) = Σ_{s∈shard_i} log(1+exp(-ŷ s)) + (λ/2)|x|²
+    (sum, not mean — matches problem (1)'s Σ_i f_i structure; the λ term is
+    split evenly so F keeps a single global λ).
+    """
+
+    X: jnp.ndarray          # (n, m_i, d)
+    y: jnp.ndarray          # (n, m_i) in {0,1}
+    lam: float
+    batch: int              # minibatch size per gradient sample (0 = full)
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def p(self) -> int:
+        return self.X.shape[2] + 1
+
+    # -- losses --------------------------------------------------------- #
+    def _margins(self, Xb, yb, x):
+        w, b = x[:-1], x[-1]
+        logits = Xb @ w + b
+        s = 2.0 * yb.astype(jnp.float32) - 1.0
+        return logits * s
+
+    def local_loss(self, i: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+        m = self._margins(self.X[i], self.y[i], x)
+        return jnp.sum(jax.nn.softplus(-m)) + 0.5 * self.lam * jnp.sum(x * x)
+
+    def global_loss(self, x: jnp.ndarray) -> jnp.ndarray:
+        """F(x) = Σ_i f_i(x), evaluated on the full data."""
+        losses = jax.vmap(lambda i: self.local_loss(i, x))(jnp.arange(self.n))
+        return jnp.sum(losses)
+
+    def mean_loss(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.global_loss(x) / (self.X.shape[0] * self.X.shape[1])
+
+    def accuracy(self, x: jnp.ndarray) -> jnp.ndarray:
+        w, b = x[:-1], x[-1]
+        logits = self.X.reshape(-1, self.X.shape[-1]) @ w + b
+        pred = (logits > 0).astype(jnp.int32)
+        return jnp.mean((pred == self.y.reshape(-1)).astype(jnp.float32))
+
+    # -- gradients ------------------------------------------------------ #
+    def grad_fn(self) -> Callable:
+        """Stochastic grad_fn(node, x, key): minibatch ∇f_i, unbiased."""
+        m_i = self.X.shape[1]
+        full = self.batch <= 0 or self.batch >= m_i
+
+        if full:
+            def gfn(i, x, key):
+                del key
+                return jax.grad(lambda xx: self.local_loss(i, xx))(x)
+            return gfn
+
+        scale = m_i / self.batch  # rescale minibatch sum to unbiased f_i grad
+
+        def gfn(i, x, key):
+            idx = jax.random.randint(key, (self.batch,), 0, m_i)
+            Xb, yb = self.X[i][idx], self.y[i][idx]
+
+            def loss(xx):
+                mg = self._margins(Xb, yb, xx)
+                data = jnp.sum(jax.nn.softplus(-mg)) * scale
+                return data + 0.5 * self.lam * jnp.sum(xx * xx)
+
+            return jax.grad(loss)(x)
+        return gfn
+
+    def optimum(self, iters: int = 2000, lr: float = 0.5) -> jnp.ndarray:
+        """Reference x* by full-batch gradient descent on F (for gap plots)."""
+        x = jnp.zeros(self.p, jnp.float32)
+        g = jax.jit(jax.grad(lambda xx: self.mean_loss(xx)))
+
+        def body(x, _):
+            return x - lr * g(x), None
+        x, _ = jax.lax.scan(body, x, None, length=iters)
+        return x
+
+
+def make_logistic_problem(
+    n: int, *, m: int = 12_000, d: int = 784, lam: float = 1e-3,
+    batch: int = 32, heterogeneous: bool = False, seed: int = 0,
+) -> LogisticProblem:
+    from .synthetic import logistic_dataset, partition
+
+    X, y = logistic_dataset(m, d, seed=seed)
+    Xs, ys = partition(X, y, n, heterogeneous=heterogeneous, seed=seed)
+    # λ split evenly across nodes so Σ_i f_i carries a single global λ
+    return LogisticProblem(
+        X=jnp.asarray(Xs), y=jnp.asarray(ys), lam=lam / n, batch=batch,
+    )

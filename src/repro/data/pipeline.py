@@ -1,0 +1,40 @@
+"""Per-node sharded data pipeline for LM training.
+
+Each R-FAST node owns a disjoint shard of the (synthetic) corpus — problem
+(1)'s local distributions D_i.  The iterator yields host numpy batches;
+``device_put_sharded``-style placement is handled by the launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["LMShardConfig", "lm_batch_iterator", "node_batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMShardConfig:
+    vocab: int
+    batch_per_node: int
+    seq_len: int
+    n_nodes: int
+    seed: int = 0
+
+
+def node_batch(cfg: LMShardConfig, node: int, step: int):
+    """Deterministic batch for (node, step): tokens, labels (next-token)."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, node, step]))
+    toks = rng.integers(0, cfg.vocab, (cfg.batch_per_node, cfg.seq_len + 1),
+                        dtype=np.int64)
+    return toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int32)
+
+
+def lm_batch_iterator(cfg: LMShardConfig, node: int,
+                      start_step: int = 0) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    step = start_step
+    while True:
+        yield node_batch(cfg, node, step)
+        step += 1

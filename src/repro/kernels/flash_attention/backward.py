@@ -1,0 +1,230 @@
+"""Pallas TPU flash attention BACKWARD (two-pass, no S² HBM traffic).
+
+Standard flash-bwd decomposition using the saved fp32 row statistic
+lse = m + log l from the forward, plus delta = rowsum(dO ⊙ O):
+
+  p     = exp(q·kᵀ·scale − lse)
+  dv   += pᵀ · dO
+  dp    = dO · vᵀ
+  ds    = p ⊙ (dp − delta) · scale
+  dq   += ds · k        (grid over q blocks, sequential over kv blocks)
+  dk   += dsᵀ · q       (grid over kv blocks, sequential over q blocks)
+
+Two pallas_calls (dq-kernel, dkv-kernel) so every output is accumulated
+in a VMEM scratch owned by exactly one grid slot — no cross-step
+read-modify-write of HBM outputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_vjp"]
+
+NEG = -1e30
+
+
+def _mask(q0, k0, bq, bk, causal, window):
+    if not causal:
+        return None
+    qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    ki = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    return m
+
+
+def _p_block(q, k, lse, q0, k0, bq, bk, scale, causal, window):
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    m = _mask(q0, k0, bq, bk, causal, window)
+    if m is not None:
+        s = jnp.where(m, s, NEG)
+    return jnp.exp(s - lse)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_ref, *, scale, causal, window, bq, bk, n_kv):
+    kv_i = pl.program_id(3)
+    q_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0, k0 = q_i * bq, kv_i * bk
+
+    def body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0][:, None]
+        delta = delta_ref[0, 0][:, None]
+        p = _p_block(q, k, lse, q0, k0, bq, bk, scale, causal, window)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * scale
+        acc_ref[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if causal:
+        run = k0 <= q0 + bq - 1
+        if window is not None:
+            run = jnp.logical_and(run, k0 + bk - 1 > q0 - window)
+        pl.when(run)(body)
+    else:
+        body()
+
+    @pl.when(kv_i == n_kv - 1)
+    def _done():
+        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *,
+                scale, causal, window, bq, bk, n_q):
+    q_i = pl.program_id(3)
+    kv_i = pl.program_id(2)
+
+    @pl.when(q_i == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q0, k0 = q_i * bq, kv_i * bk
+
+    def body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0][:, None]
+        delta = delta_ref[0, 0][:, None]
+        p = _p_block(q, k, lse, q0, k0, bq, bk, scale, causal, window)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * scale
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if causal:
+        run = k0 <= q0 + bq - 1
+        if window is not None:
+            run = jnp.logical_and(run, k0 + bk - 1 > q0 - window)
+        pl.when(run)(body)
+    else:
+        body()
+
+    @pl.when(q_i == n_q - 1)
+    def _done():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _run_dq(q, k, v, do, lse, delta, *, scale, causal, window, bq, bk,
+            interpret):
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    n_kv = Sk // bk
+    grid = (B, H, Sq // bq, n_kv)
+    kern = functools.partial(_dq_kernel, scale=scale, causal=causal,
+                             window=window, bq=bq, bk=bk, n_kv=n_kv)
+    qs = pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0))
+    ks = pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki: (b, h, ki, 0))
+    rs = pl.BlockSpec((1, 1, bq), lambda b, h, qi, ki: (b, h, qi))
+    return pl.pallas_call(
+        kern, grid=grid,
+        in_specs=[qs, ks, ks, qs, rs, rs],
+        out_specs=qs,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+
+def _run_dkv(q, k, v, do, lse, delta, *, scale, causal, window, bq, bk,
+             interpret):
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    n_q = Sq // bq
+    grid = (B, H, Sk // bk, n_q)
+    kern = functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                             window=window, bq=bq, bk=bk, n_q=n_q)
+    qs = pl.BlockSpec((1, 1, bq, D), lambda b, h, ki, qi: (b, h, qi, 0))
+    ks = pl.BlockSpec((1, 1, bk, D), lambda b, h, ki, qi: (b, h, ki, 0))
+    rs = pl.BlockSpec((1, 1, bq), lambda b, h, ki, qi: (b, h, qi))
+    return pl.pallas_call(
+        kern, grid=grid,
+        in_specs=[qs, ks, ks, qs, rs, rs],
+        out_specs=(ks, ks),
+        out_shape=(jax.ShapeDtypeStruct((B, H, Sk, D), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H, Sk, D), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((bk, D), jnp.float32),
+                        pltpu.VMEM((bk, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention_vjp(q, k, v, causal=True, window=None, scale=None,
+                        bq=128, bk=128, interpret=True):
+    """Differentiable flash attention, (B,H,S,D) layout, GQA via caller
+    repeat of kv heads (grads flow back through the repeat)."""
+    o, _ = _fwd(q, k, v, causal, window, scale, bq, bk, interpret)
+    return o
+
+
+def _fwd(q, k, v, causal, window, scale, bq, bk, interpret):
+    """Forward that also returns lse, via the fwd kernel run in fp32
+    (reference jnp fwd with streaming over kv blocks would be equally
+    valid; we reuse the kernel's math here in jnp for lse exactness)."""
+    B, H, Sq, D = q.shape
+    scale_ = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, k.astype(jnp.float32)) * scale_
+    if causal:
+        qi = jnp.arange(Sq)[:, None]
+        ki = jnp.arange(k.shape[2])[None, :]
+        m = ki <= qi
+        if window is not None:
+            m &= ki > qi - window
+        s = jnp.where(m[None, None], s, NEG)
+    lse = jax.scipy.special.logsumexp(s, axis=-1)
+    p = jnp.exp(s - lse[..., None])
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype), (q, k, v, lse, o.astype(jnp.float32))
+
+
+def _fwd_rule(q, k, v, causal, window, scale, bq, bk, interpret):
+    o, res = _fwd(q, k, v, causal, window, scale, bq, bk, interpret)
+    return o, res
+
+
+def _bwd_rule(causal, window, scale, bq, bk, interpret, res, do):
+    q, k, v, lse, o = res
+    D = q.shape[-1]
+    scale_ = scale if scale is not None else D ** -0.5
+    dof = do.astype(jnp.float32)
+    delta = jnp.sum(dof * o, axis=-1)                    # (B,H,Sq)
+    bq_ = min(bq, q.shape[2])
+    bk_ = min(bk, k.shape[2])
+    kw = dict(scale=scale_, causal=causal, window=window, bq=bq_, bk=bk_,
+              interpret=interpret)
+    dq = _run_dq(q, k, v, dof, lse, delta, **kw)
+    dk, dv = _run_dkv(q, k, v, dof, lse, delta, **kw)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_vjp.defvjp(_fwd_rule, _bwd_rule)

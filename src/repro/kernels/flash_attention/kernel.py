@@ -1,0 +1,127 @@
+"""Pallas TPU flash attention (forward) with online softmax.
+
+Grid: (B, H, num_q_blocks, num_kv_blocks) — the kv dim is the innermost
+(sequential) axis; running max / denominator / accumulator live in VMEM
+scratch and persist across kv steps.  Causal and sliding-window tiles that
+are fully masked are skipped with ``pl.when``.
+
+GQA: the kv head index is ``h // (H // KV)`` in the k/v index maps, so
+kv blocks are never materialized per query head.
+
+VMEM per step: (BQ + 2·BK)·D·4 + BQ·D·4 + BQ·BK·4 ≈ 0.6 MB at
+BQ=BK=128, D=128 — far under the ~16 MB v5e budget; BQ/BK are tunable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, bq, bk, n_kv):
+    kv_i = pl.program_id(3)
+    q_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q0 = q_i * bq
+    k0 = kv_i * bk
+
+    def body():
+        q = q_ref[0, 0].astype(jnp.float32)        # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)        # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)        # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if causal:
+            qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            ki = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = ki <= qi
+            if window is not None:
+                mask &= ki > qi - window
+            s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]                        # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # tile-level skip: any unmasked (q, k) pair in this tile?
+        run = k0 <= q0 + bq - 1
+        if window is not None:
+            run = jnp.logical_and(run, k0 + bk - 1 > q0 - window)
+        pl.when(run)(body)
+    else:
+        body()
+
+    @pl.when(kv_i == n_kv - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal=True, window=None, scale=None,
+                           bq=128, bk=128, interpret=True):
+    """q (B,H,Sq,D); k/v (B,KV,Sk,D) with H % KV == 0.  -> (B,H,Sq,D)."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    rep = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    n_kv = Sk // bk
+    grid = (B, H, Sq // bq, n_kv)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, n_kv=n_kv)
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki: (b, h // rep, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki: (b, h // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(q, k, v)

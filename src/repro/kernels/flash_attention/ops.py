@@ -1,0 +1,26 @@
+"""jit'd wrapper: model-layout (B,S,H,D) flash attention with impl switch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "impl", "interpret",
+                                   "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, window=None, impl="ref",
+                    interpret=True, bq=128, bk=128):
+    """q (B,Sq,H,D); k/v (B,Sk,KV,D) — the model's natural layout."""
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window)
+    o = flash_attention_pallas(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        bq=bq, bk=bk, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / full),
+with GQA (kv heads broadcast over query-head groups)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q (B,Sq,H,D); k/v (B,Sk,KV,D) with H % KV == 0.  fp32 softmax."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, rep, D)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qf, k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + (k.shape[1] - Sq)
+        ki = jnp.arange(k.shape[1])[None, :]
+        m = ki <= qi
+        if window:
+            m &= ki > qi - window
+        s = jnp.where(m[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused R-FAST protocol update.
+
+The protocol inner loop touches 6+ full-parameter arrays; unfused, XLA
+emits ~8 separate HBM sweeps (one per elementwise op).  This kernel makes
+ONE pass: every operand is tiled into VMEM blocks of (BLK_R, 128) and all
+arithmetic happens in registers/VMEM before the single write-back.
+
+Layout: the caller reshapes the flat parameter vector to (R, 128) rows
+(padding the tail); neighbour stacks get a leading K dim and are tiled
+(K, BLK_R, 128) — K is tiny (tree/ring in-degree 1-2), so VMEM holds
+(3 + 2·Ka + Kw + Ko) · BLK_R · 128 · 4 B; BLK_R=256 with K=2 ≈ 1.2 MB,
+far under the ~16 MB v5e VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rfast_update_pallas", "BLK_R", "LANE"]
+
+BLK_R = 256     # rows per block (8-aligned for fp32 sublanes)
+LANE = 128      # TPU lane width
+
+
+def _kernel(scal_ref, w_in_ref, mask_ref, a_out_ref,
+            x_ref, z_ref, gn_ref, go_ref, v_in_ref, rho_in_ref, rho_buf_ref,
+            rho_out_ref,
+            x_o_ref, v_o_ref, z_o_ref, rho_out_o_ref, rho_buf_o_ref):
+    gamma = scal_ref[0, 0]
+    w_self = scal_ref[0, 1]
+    a_self = scal_ref[0, 2]
+
+    x = x_ref[...].astype(jnp.float32)
+    z = z_ref[...].astype(jnp.float32)
+    v = x - gamma * z
+
+    # consensus pull
+    x_new = w_self * v
+    for k in range(v_in_ref.shape[0]):
+        x_new += w_in_ref[0, k] * v_in_ref[k].astype(jnp.float32)
+
+    # robust tracking
+    recv = jnp.zeros_like(z)
+    for k in range(rho_in_ref.shape[0]):
+        m = mask_ref[0, k]
+        recv += m * (rho_in_ref[k].astype(jnp.float32)
+                     - rho_buf_ref[k].astype(jnp.float32))
+    z_half = z + recv + gn_ref[...].astype(jnp.float32) \
+        - go_ref[...].astype(jnp.float32)
+
+    x_o_ref[...] = x_new.astype(x_o_ref.dtype)
+    v_o_ref[...] = v.astype(v_o_ref.dtype)
+    z_o_ref[...] = (a_self * z_half).astype(z_o_ref.dtype)
+    for k in range(rho_out_ref.shape[0]):
+        rho_out_o_ref[k] = (rho_out_ref[k].astype(jnp.float32)
+                            + a_out_ref[0, k] * z_half
+                            ).astype(rho_out_o_ref.dtype)
+    for k in range(rho_buf_ref.shape[0]):
+        m = mask_ref[0, k]
+        rho_buf_o_ref[k] = (m * rho_in_ref[k].astype(jnp.float32)
+                            + (1.0 - m) * rho_buf_ref[k].astype(jnp.float32)
+                            ).astype(rho_buf_o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rfast_update_pallas(x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf,
+                        mask, rho_out, a_out, scalars, *, interpret=True):
+    """All 2-D operands shaped (R, 128); stacks (K, R, 128); R % BLK_R == 0.
+
+    scalars: (1, 3) = [gamma, w_self, a_self]; w_in (1, Kw); mask (1, Ka);
+    a_out (1, Ko).  Returns (x', v, z', rho_out', rho_buf').
+    """
+    R = x.shape[0]
+    grid = (R // BLK_R,)
+    blk = lambda: pl.BlockSpec((BLK_R, LANE), lambda i: (i, 0))
+    blk_k = lambda K: pl.BlockSpec((K, BLK_R, LANE), lambda i: (0, i, 0))
+    smem = lambda K: pl.BlockSpec((1, K), lambda i: (0, 0))
+
+    Kw, Ka, Ko = v_in.shape[0], rho_in.shape[0], rho_out.shape[0]
+    out_shapes = (
+        jax.ShapeDtypeStruct(x.shape, x.dtype),       # x'
+        jax.ShapeDtypeStruct(x.shape, x.dtype),       # v
+        jax.ShapeDtypeStruct(z.shape, z.dtype),       # z'
+        jax.ShapeDtypeStruct(rho_out.shape, rho_out.dtype),
+        jax.ShapeDtypeStruct(rho_buf.shape, rho_buf.dtype),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[smem(3), smem(Kw), smem(Ka), smem(Ko),
+                  blk(), blk(), blk(), blk(),
+                  blk_k(Kw), blk_k(Ka), blk_k(Ka), blk_k(Ko)],
+        out_specs=(blk(), blk(), blk(), blk_k(Ko), blk_k(Ka)),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(scalars, w_in, mask, a_out, x, z, g_new, g_old, v_in, rho_in,
+      rho_buf, rho_out)

@@ -1,0 +1,61 @@
+"""jit'd public wrapper: flat-vector (and pytree) R-FAST update.
+
+Handles padding/reshaping to the kernel's (R, 128) layout and exposes a
+``ref``/``pallas`` switch (pallas runs in interpret mode on CPU; on TPU
+pass interpret=False).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BLK_R, LANE, rfast_update_pallas
+from .ref import rfast_update_ref
+
+__all__ = ["rfast_update", "pad_to_blocks", "unpad"]
+
+
+def pad_to_blocks(v: jax.Array) -> tuple[jax.Array, int]:
+    """(..., P) -> (..., R, 128) with R a multiple of BLK_R."""
+    P = v.shape[-1]
+    per = BLK_R * LANE
+    Pp = -(-P // per) * per
+    v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, Pp - P)])
+    return v.reshape(*v.shape[:-1], Pp // LANE, LANE), P
+
+
+def unpad(v: jax.Array, P: int) -> jax.Array:
+    return v.reshape(*v.shape[:-2], -1)[..., :P]
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret"))
+def rfast_update(x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask,
+                 rho_out, a_out, *, gamma, w_self, a_self,
+                 impl: str = "ref", interpret: bool = True):
+    """Flat-vector protocol update; see ref.py for the math.
+
+    impl="ref" uses the jnp oracle; impl="pallas" the fused kernel.
+    """
+    if impl == "ref":
+        return rfast_update_ref(
+            x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask, rho_out,
+            a_out, gamma=gamma, w_self=w_self, a_self=a_self)
+
+    xb, P = pad_to_blocks(x)
+    zb, _ = pad_to_blocks(z)
+    gnb, _ = pad_to_blocks(g_new)
+    gob, _ = pad_to_blocks(g_old)
+    vib, _ = pad_to_blocks(v_in)
+    rib, _ = pad_to_blocks(rho_in)
+    rbb, _ = pad_to_blocks(rho_buf)
+    rob, _ = pad_to_blocks(rho_out)
+    scal = jnp.asarray([[gamma, w_self, a_self]], jnp.float32)
+    out = rfast_update_pallas(
+        xb, zb, gnb, gob, vib, w_in[None].astype(jnp.float32),
+        rib, rbb, mask[None].astype(jnp.float32), rob,
+        a_out[None].astype(jnp.float32), scal, interpret=interpret)
+    x_n, v_n, z_n, ro_n, rb_n = out
+    return (unpad(x_n, P), unpad(v_n, P), unpad(z_n, P),
+            unpad(ro_n, P), unpad(rb_n, P))

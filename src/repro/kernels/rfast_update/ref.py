@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused R-FAST protocol update (S1, S2a-c, S4).
+
+Operates on flat per-node parameter vectors:
+
+  v      = x − γ z
+  x'     = w_self · v + Σ_j w_in[j] · v_in[j]
+  recv   = Σ_j m[j] · (rho_in[j] − rho_buf[j])
+  z_half = z + recv + g_new − g_old
+  z'     = a_self · z_half
+  rho_out'[j] = rho_out[j] + a_out[j] · z_half
+  rho_buf'[j] = m[j] ? rho_in[j] : rho_buf[j]
+
+Eight elementwise passes over the parameter vector fused into one HBM
+sweep by the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rfast_update_ref"]
+
+
+def rfast_update_ref(x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask,
+                     rho_out, a_out, *, gamma, w_self, a_self):
+    """Shapes: x/z/g_* (P,); v_in (Kw,P); w_in (Kw,);
+    rho_in/rho_buf (Ka,P); mask (Ka,); rho_out (Ko,P); a_out (Ko,).
+    Returns (x', v, z', rho_out', rho_buf')."""
+    f32 = jnp.float32
+    xf, zf = x.astype(f32), z.astype(f32)
+    v = xf - gamma * zf
+    x_new = w_self * v + jnp.einsum("k,kp->p", w_in.astype(f32),
+                                    v_in.astype(f32))
+    recv = jnp.einsum("k,kp->p", mask.astype(f32),
+                      rho_in.astype(f32) - rho_buf.astype(f32))
+    z_half = zf + recv + g_new.astype(f32) - g_old.astype(f32)
+    z_new = a_self * z_half
+    rho_out_new = rho_out.astype(f32) + a_out.astype(f32)[:, None] * z_half
+    rho_buf_new = jnp.where(mask[:, None] > 0, rho_in, rho_buf)
+    dt = x.dtype
+    return (x_new.astype(dt), v.astype(dt), z_new.astype(dt),
+            rho_out_new.astype(dt), rho_buf_new.astype(rho_buf.dtype))

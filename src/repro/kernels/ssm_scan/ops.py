@@ -1,0 +1,20 @@
+"""jit'd wrapper for the selective scan with impl switch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import ssm_scan_pallas
+from .ref import selective_scan_ref
+
+__all__ = ["selective_scan"]
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret", "chunk", "bd"))
+def selective_scan(u, dt, A, B, C, D, *, impl="ref", interpret=True,
+                   chunk=256, bd=256):
+    if impl == "ref":
+        return selective_scan_ref(u, dt, A, B, C, D)
+    return ssm_scan_pallas(u, dt, A, B, C, D, chunk=chunk, bd=bd,
+                           interpret=interpret)

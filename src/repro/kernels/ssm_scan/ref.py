@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the chunked selective scan — re-exports the model
+layer's reference implementation so kernel and model share one oracle."""
+from repro.models.ssm import selective_scan_ref  # noqa: F401
+
+__all__ = ["selective_scan_ref"]

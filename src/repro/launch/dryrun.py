@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# This is dry-run-only — tests/benches see the real single CPU device.
+
+_DOC = """Multi-pod dry-run: lower + compile every (architecture × input shape)
+for the production meshes and capture memory / cost / collective data.
+
+Per case:
+  1. full config, layers scanned  -> compile proof, memory_analysis()
+  2. unrolled L=2 and L=4 configs -> cost_analysis() linear fit in L
+     (XLA counts while-loop bodies once, so scanned cost_analysis cannot
+     be trusted for totals; the unrolled fit is exact for everything
+     linear in depth — model flops, protocol update, collectives)
+Artifacts: reports/dryrun/<arch>__<shape>__<mesh>[__<rules>].json
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--rules fsdp]
+"""
+__doc__ = _DOC
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.launch import shardings as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, build_case, shape_supported
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9_\[\],\s{}:\*]+?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_summary(hlo_text: str) -> dict:
+    """Per-device bytes and op counts per collective kind (result sizes)."""
+    out: dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        b = _type_bytes(m.group(1))
+        d = out.setdefault(kind, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += b
+    return out
+
+
+def scale_layers(cfg, k: int):
+    return dataclasses.replace(
+        cfg, n_layers=k,
+        n_enc_layers=(min(k, cfg.n_enc_layers) if cfg.enc_dec else 0))
+
+
+def _cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def _mem_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    return {k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")}
+
+
+def run_case(arch: str, shape: str, *, multi_pod: bool = False,
+             rules_name: str = "base", fit: bool = True,
+             build_kw: dict | None = None, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    rules = shd.RULES_FSDP if rules_name == "fsdp" else shd.RULES_BASE
+    rec: dict = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "rules": rules_name, "ok": False,
+    }
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        rec["skipped"] = why
+        return rec
+    kw = dict(rules=rules, **(build_kw or {}))
+    try:
+        t0 = time.time()
+        fn, args = build_case(cfg, mesh, shape, **kw)
+        lowered = jax.jit(fn).lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec["ok"] = True
+        rec["lower_s"] = round(t1 - t0, 1)
+        rec["compile_s"] = round(t2 - t1, 1)
+        rec["memory"] = _mem_dict(compiled)
+        rec["cost_scanned"] = _cost_dict(compiled)
+        rec["collectives_scanned"] = collective_summary(compiled.as_text())
+        if verbose:
+            ma = compiled.memory_analysis()
+            print(f"  [{arch} {shape} {rec['mesh']}] compile ok "
+                  f"({rec['compile_s']}s): args/device="
+                  f"{ma.argument_size_in_bytes/2**30:.2f} GiB, "
+                  f"temp/device={ma.temp_size_in_bytes/2**30:.2f} GiB")
+        if fit:
+            costs = {}
+            for k in (2, 4):
+                cfgk = scale_layers(cfg, k)
+                fnk, argsk = build_case(cfgk, mesh, shape, unroll=True, **kw)
+                ck = jax.jit(fnk).lower(*argsk).compile()
+                costs[k] = _cost_dict(ck)
+                costs[k]["collectives"] = collective_summary(ck.as_text())
+            def lin(f2, f4, L):
+                body = (f4 - f2) / 2.0
+                return max(0.0, f2 - 2 * body) + L * body
+            L = cfg.n_layers
+            coll2 = sum(v["bytes"] for v in costs[2]["collectives"].values())
+            coll4 = sum(v["bytes"] for v in costs[4]["collectives"].values())
+            rec["fit"] = {
+                "L": L,
+                "flops_perdev": lin(costs[2]["flops"], costs[4]["flops"], L),
+                "bytes_perdev": lin(costs[2]["bytes"], costs[4]["bytes"], L),
+                "coll_bytes_perdev": lin(coll2, coll4, L),
+                "l2": costs[2], "l4": costs[4],
+            }
+    except Exception as e:  # noqa: BLE001 — a failed case is a data point
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"  [{arch} {shape} {rec['mesh']}] FAILED: {rec['error']}")
+    return rec
+
+
+def case_path(outdir: str, rec: dict) -> str:
+    name = (f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+            + ("" if rec["rules"] == "base" else f"__{rec['rules']}")
+            + ".json")
+    return os.path.join(outdir, name)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--rules", default="base", choices=["base", "fsdp"])
+    ap.add_argument("--no-fit", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ARCHS[:10] if args.all else [args.arch]
+    shapes = list(SHAPES) if args.all else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_case(arch, shape, multi_pod=mp,
+                               rules_name=args.rules, fit=not args.no_fit)
+                with open(case_path(args.out, rec), "w") as f:
+                    json.dump(rec, f, indent=1)
+                n_ok += rec["ok"]
+                n_fail += (not rec["ok"]) and ("skipped" not in rec)
+                n_skip += "skipped" in rec
+    print(f"dry-run: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

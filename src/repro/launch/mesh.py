@@ -1,0 +1,47 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to obtain the placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "node_axes_for", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def node_axes_for(mesh, *, n_nodes: int | None = None) -> tuple[str, ...]:
+    """Which mesh axes carry the R-FAST node dimension.
+
+    Default: all non-'model' axes (16 nodes single-pod, 32 multi-pod).
+    ``n_nodes`` may select the 'pod'-only variant (nodes span pods, the
+    'data' axis is then free for FSDP) — used by the memory hillclimb.
+    """
+    names = mesh.axis_names
+    if n_nodes is None:
+        return tuple(a for a in names if a != "model")
+    if "pod" in names and n_nodes == mesh.shape["pod"]:
+        return ("pod",)
+    non_model = tuple(a for a in names if a != "model")
+    prod = 1
+    for a in non_model:
+        prod *= mesh.shape[a]
+    if n_nodes == prod:
+        return non_model
+    raise ValueError(f"unsupported n_nodes={n_nodes} for mesh {names}")
+
+
+# TPU v5e hardware constants for the roofline (per chip)
+HW = {
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_bw": 50e9,              # B/s per link
+}

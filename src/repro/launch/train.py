@@ -1,0 +1,121 @@
+"""End-to-end R-FAST training driver (CPU-runnable at reduced scale).
+
+Trains an LM with the R-FAST protocol wrapping per-node AdamW-free SGD on
+the tracked direction, over a selectable topology, with checkpointing and
+(optionally) simulated packet loss.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch rfast-100m --reduced --nodes 4 --steps 200 --topology binary_tree
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, latest_step, save_checkpoint
+from repro.metrics import MetricsLogger, StepTimer
+from repro.configs import ARCHS, get_config
+from repro.core.runtime import edge_arrays, init_node_state, make_rfast_round
+from repro.core.topology import get_topology
+from repro.data.pipeline import LMShardConfig, node_batch
+from repro.models.transformer import init_params, loss_fn
+from repro.optim.schedules import warmup_cosine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rfast-100m", choices=ARCHS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="2-layer smoke variant (CI-scale)")
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-per-node", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--topology", default="binary_tree")
+    ap.add_argument("--gamma", type=float, default=3e-3)
+    ap.add_argument("--momentum", type=float, default=0.0)
+    ap.add_argument("--loss-prob", type=float, default=0.0)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--metrics", default="", help="JSONL metrics path")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    n = args.nodes
+    topo = get_topology(args.topology, n)
+    spec = edge_arrays(topo)
+    shard_cfg = LMShardConfig(vocab=cfg.vocab,
+                              batch_per_node=args.batch_per_node,
+                              seq_len=args.seq, n_nodes=n, seed=args.seed)
+
+    def grad_fn(params, batch, key):
+        del key
+        toks, labels = batch
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, toks, labels))(params)
+
+    def batches_at(step: int):
+        toks = np.stack([node_batch(shard_cfg, i, step)[0] for i in range(n)])
+        labels = np.stack([node_batch(shard_cfg, i, step)[1]
+                           for i in range(n)])
+        return jnp.asarray(toks), jnp.asarray(labels)
+
+    gamma = warmup_cosine(args.gamma, warmup=max(1, args.steps // 20),
+                          total=args.steps)
+    robust = args.loss_prob > 0
+    round_fn = jax.jit(make_rfast_round(
+        spec, grad_fn, gamma=gamma, robust=robust,
+        momentum=args.momentum))
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M nodes={n} "
+          f"topo={topo.name} robust={robust}")
+
+    state = init_node_state(spec, params, grad_fn, batches_at(0), key,
+                            robust=robust, momentum=args.momentum)
+    start = 0
+    if args.ckpt and latest_step(args.ckpt) is not None:
+        start = latest_step(args.ckpt)
+        state = load_checkpoint(args.ckpt, state)
+        print(f"resumed from step {start}")
+
+    rng = np.random.default_rng(args.seed + 1)
+    logger = MetricsLogger(args.metrics) if args.metrics else None
+    timer = StepTimer()
+    t0 = time.time()
+    for step in range(start, args.steps):
+        masks = None
+        if robust:
+            masks = jnp.asarray(
+                (rng.uniform(size=spec.e_pad) >= args.loss_prob),
+                jnp.float32)
+        keys = jax.random.split(jax.random.fold_in(key, step), n)
+        state, metrics = round_fn(state, batches_at(step), keys, masks)
+        timer.tick()
+        if logger:
+            logger.log(step + 1, loss=metrics["loss"],
+                       sps=timer.steps_per_sec)
+        if (step + 1) % args.log_every == 0:
+            l = float(metrics["loss"])
+            dt = time.time() - t0
+            print(f"step {step+1:5d} loss {l:.4f} "
+                  f"({dt:.1f}s, {timer.steps_per_sec:.2f} it/s)", flush=True)
+        if args.ckpt and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, step + 1, state)
+    if logger:
+        logger.close()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .config import ModelConfig  # noqa: F401
+from .transformer import (  # noqa: F401
+    init_params, forward, loss_fn, init_cache, decode_step, prefill,
+)
+from .sharding import mesh_rules, shard, DEFAULT_RULES, FSDP_RULES  # noqa: F401

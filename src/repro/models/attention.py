@@ -1,0 +1,279 @@
+"""Attention mixers: GQA (grouped-query) and MLA (multi-head latent,
+deepseek-v2), with full-causal / sliding-window / non-causal masks, rotary
+or absolute positions, and ring-buffer KV caches for decode.
+
+Conventions:
+* training / prefill call ``*_apply`` with the full sequence and no cache;
+* decode calls ``*_decode`` with one new token and a cache dict.
+* caches store K roped at absolute positions; slot validity is tracked by a
+  ``pos`` array (−1 = empty) so sliding-window ring buffers need no shifts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, dense_init, rope_cos_sin
+from .sharding import shard
+
+__all__ = [
+    "gqa_init", "gqa_apply", "gqa_decode", "gqa_cache",
+    "mla_init", "mla_apply", "mla_decode", "mla_cache",
+    "cross_init", "cross_apply", "cross_decode",
+]
+
+NEG = -1e30
+
+
+# ------------------------------------------------------------------ #
+# shared score/softmax core (grouped heads: no KV repeat materialized)
+# ------------------------------------------------------------------ #
+def _sdpa(q, k, v, mask, scale):
+    """q (B,Sq,G,R,dk)  k (B,Sk,G,dk)  v (B,Sk,G,dv)  mask (B,1,1,Sq,Sk)."""
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", q, k) * scale
+    s = jnp.where(mask, s.astype(jnp.float32), NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bgrqk,bkgd->bqgrd", p, v)
+
+
+def _causal_mask(Sq: int, Sk: int, window, offset: int = 0):
+    """(Sq,Sk) causal (+sliding window) mask; offset = kv positions before q0."""
+    qi = jnp.arange(Sq)[:, None] + offset
+    ki = jnp.arange(Sk)[None, :]
+    m = ki <= qi
+    if window:
+        m &= ki > qi - window
+    return m
+
+
+# ------------------------------------------------------------------ #
+# GQA
+# ------------------------------------------------------------------ #
+def gqa_init(cfg: ModelConfig, key, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, KV * hd, dtype),
+        "wv": dense_init(ks[2], d, KV * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _qkv(cfg: ModelConfig, p, x):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    R = H // KV
+    q = shard(q.reshape(B, S, H, hd), "batch", "seq", "heads", "head_dim")
+    k = shard(k.reshape(B, S, KV, hd), "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v.reshape(B, S, KV, hd), "batch", "seq", "kv_heads", "head_dim")
+    return q.reshape(B, S, KV, R, hd), k, v
+
+
+def gqa_apply(cfg: ModelConfig, p, x, positions, *, causal=True,
+              window=None, return_kv=False):
+    """Full-sequence attention (train / prefill).  ``return_kv`` also
+    returns the roped (k, v) for cache filling."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(cfg, p, x)
+    if cfg.use_rope:
+        cos, sin = rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+        qf = q.reshape(B, S, cfg.n_heads, cfg.hd)
+        qf = apply_rope(qf, cos, sin).reshape(q.shape)
+        k = apply_rope(k, cos, sin)
+        q = qf
+    if causal:
+        mask = _causal_mask(S, S, window)[None, None, None]
+    else:
+        mask = jnp.ones((1, 1, 1, S, S), bool)
+    o = _sdpa(q, k, v, mask, cfg.hd ** -0.5)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    out = o @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def gqa_cache(cfg: ModelConfig, batch: int, capacity: int, dtype):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, capacity, KV, hd), dtype),
+        "v": jnp.zeros((batch, capacity, KV, hd), dtype),
+    }
+
+
+def gqa_decode(cfg: ModelConfig, p, x, cache, pos, slot_pos, window=None):
+    """One-token decode.  ``pos`` () current absolute position; ``slot_pos``
+    (C,) the absolute position stored in each cache slot (−1 = empty),
+    already including this step's write slot."""
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(cfg, p, x)        # S = 1
+    if cfg.use_rope:
+        cos, sin = rope_cos_sin(pos[None], cfg.hd, cfg.rope_theta)
+        qf = q.reshape(B, 1, cfg.n_heads, cfg.hd)
+        q = apply_rope(qf, cos, sin).reshape(q.shape)
+        k_new = apply_rope(k_new, cos, sin)
+    C = cache["k"].shape[1]
+    slot = (pos % C).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window:
+        valid &= slot_pos > pos - window
+    mask = valid[None, None, None, None, :]
+    o = _sdpa(q, k, v, mask, cfg.hd ** -0.5)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return o, {"k": k, "v": v}
+
+
+# ------------------------------------------------------------------ #
+# MLA (deepseek-v2)
+# ------------------------------------------------------------------ #
+def mla_init(cfg: ModelConfig, key, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    hd, vd, r, rd = cfg.hd, cfg.v_hd, cfg.kv_lora_rank, cfg.qk_rope_dim
+    ks = jax.random.split(key, 7)
+    p = {
+        "w_dkv": dense_init(ks[0], d, r, dtype),
+        "c_scale": jnp.ones((r,), dtype),
+        "w_kr": dense_init(ks[1], d, rd, dtype),
+        "k_up": dense_init(ks[2], r, H * hd, dtype),
+        "v_up": dense_init(ks[3], r, H * vd, dtype),
+        "wo": dense_init(ks[4], H * vd, d, dtype),
+    }
+    if cfg.q_lora_rank:
+        p["q_a"] = dense_init(ks[5], d, cfg.q_lora_rank, dtype)
+        p["q_scale"] = jnp.ones((cfg.q_lora_rank,), dtype)
+        p["q_b"] = dense_init(ks[6], cfg.q_lora_rank, H * (hd + rd), dtype)
+    else:
+        p["wq"] = dense_init(ks[5], d, H * (hd + rd), dtype)
+    return p
+
+
+def _rms(x, scale):
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (xf * r).astype(x.dtype) * scale
+
+
+def _mla_q(cfg, p, x, positions):
+    B, S, _ = x.shape
+    H, hd, rd = cfg.n_heads, cfg.hd, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        q = _rms(x @ p["q_a"], p["q_scale"]) @ p["q_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, S, H, hd + rd)
+    qn, qr = q[..., :hd], q[..., hd:]
+    cos, sin = rope_cos_sin(positions, rd, cfg.rope_theta)
+    qr = apply_rope(qr, cos, sin)
+    return shard(qn, "batch", "seq", "heads", "head_dim"), \
+        shard(qr, "batch", "seq", "heads", "head_dim")
+
+
+def _mla_compress(cfg, p, x, positions):
+    rd = cfg.qk_rope_dim
+    c = _rms(x @ p["w_dkv"], p["c_scale"])              # (B,S,r)
+    kr = (x @ p["w_kr"])[:, :, None, :]                  # (B,S,1,rd)
+    cos, sin = rope_cos_sin(positions, rd, cfg.rope_theta)
+    kr = apply_rope(kr, cos, sin)[:, :, 0, :]            # (B,S,rd)
+    return c, kr
+
+
+def _mla_attend(cfg, p, qn, qr, c, kr, mask):
+    """qn (B,Sq,H,hd) qr (B,Sq,H,rd); c (B,Sk,r), kr (B,Sk,rd)."""
+    B, Sk, _ = c.shape
+    H, hd, vd = cfg.n_heads, cfg.hd, cfg.v_hd
+    kn = (c @ p["k_up"]).reshape(B, Sk, H, hd)
+    v = (c @ p["v_up"]).reshape(B, Sk, H, vd)
+    kn = shard(kn, "batch", "seq", "heads", "head_dim")
+    v = shard(v, "batch", "seq", "heads", "head_dim")
+    scale = (hd + cfg.qk_rope_dim) ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", qn, kn)
+    s = s + jnp.einsum("bqhd,bkd->bhqk", qr, kr)
+    s = jnp.where(mask, s.astype(jnp.float32) * scale, NEG)
+    pr = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pr, v)
+    return o.reshape(B, -1, H * vd) @ p["wo"]
+
+
+def mla_apply(cfg: ModelConfig, p, x, positions, *, causal=True,
+              window=None, return_kv=False):
+    B, S, _ = x.shape
+    qn, qr = _mla_q(cfg, p, x, positions)
+    c, kr = _mla_compress(cfg, p, x, positions)
+    mask = (_causal_mask(S, S, window) if causal
+            else jnp.ones((S, S), bool))[None, None]
+    out = _mla_attend(cfg, p, qn, qr, c, kr, mask)
+    if return_kv:
+        return out, (c, kr)
+    return out
+
+
+def mla_cache(cfg: ModelConfig, batch: int, capacity: int, dtype):
+    return {
+        "c": jnp.zeros((batch, capacity, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, capacity, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(cfg: ModelConfig, p, x, cache, pos, slot_pos, window=None):
+    qn, qr = _mla_q(cfg, p, x, pos[None])
+    c_new, kr_new = _mla_compress(cfg, p, x, pos[None])
+    C = cache["c"].shape[1]
+    slot = (pos % C).astype(jnp.int32)
+    c = jax.lax.dynamic_update_slice(cache["c"], c_new, (0, slot, 0))
+    kr = jax.lax.dynamic_update_slice(cache["kr"], kr_new, (0, slot, 0))
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window:
+        valid &= slot_pos > pos - window
+    mask = valid[None, None, None, :]
+    o = _mla_attend(cfg, p, qn, qr, c, kr, mask)
+    return o, {"c": c, "kr": kr}
+
+
+# ------------------------------------------------------------------ #
+# cross-attention (enc-dec)
+# ------------------------------------------------------------------ #
+def cross_init(cfg: ModelConfig, key, dtype):
+    return gqa_init(cfg, key, dtype)
+
+
+def cross_kv(cfg: ModelConfig, p, enc):
+    B, F, _ = enc.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc @ p["wk"]).reshape(B, F, KV, hd)
+    v = (enc @ p["wv"]).reshape(B, F, KV, hd)
+    if cfg.qkv_bias:
+        k = k + p["bk"].reshape(KV, hd)
+        v = v + p["bv"].reshape(KV, hd)
+    return k, v
+
+
+def cross_apply(cfg: ModelConfig, p, x, k, v):
+    """x (B,S,D) queries over fixed encoder k/v (no positions: absolute
+    embeddings already applied upstream)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, KV, H // KV, hd)
+    mask = jnp.ones((1, 1, 1, S, k.shape[1]), bool)
+    o = _sdpa(q, k, v, mask, hd ** -0.5)
+    return o.reshape(B, S, H * hd) @ p["wo"]
+
+
+def cross_decode(cfg: ModelConfig, p, x, k, v):
+    return cross_apply(cfg, p, x, k, v)

@@ -1,0 +1,104 @@
+"""Shared layer primitives: norms, MLPs, embeddings, rotary positions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import shard
+
+__all__ = [
+    "dense_init", "norm_init", "norm_apply", "mlp_init", "mlp_apply",
+    "rope_cos_sin", "apply_rope", "sinusoidal_positions",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ #
+# norms
+# ------------------------------------------------------------------ #
+def norm_init(cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if cfg.norm == "nonparam_ln":      # OLMo: no affine parameters
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def norm_apply(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        return (xf * r).astype(x.dtype) * p["scale"]
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + 1e-6)
+    if cfg.norm == "layernorm":
+        return y.astype(x.dtype) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)           # nonparam_ln
+
+
+# ------------------------------------------------------------------ #
+# dense MLP (swiglu / gelu)
+# ------------------------------------------------------------------ #
+def mlp_init(cfg: ModelConfig, key, dtype, d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], d, ff, dtype),
+         "wo": dense_init(ks[1], ff, d, dtype)}
+    if cfg.mlp == "swiglu":
+        p["wg"] = dense_init(ks[2], d, ff, dtype)
+    if cfg.mlp_bias:
+        p["bi"] = jnp.zeros((ff,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    h = x @ p["wi"]
+    if cfg.mlp_bias:
+        h = h + p["bi"]
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "batch", "seq", "mlp")
+    y = h @ p["wo"]
+    if cfg.mlp_bias:
+        y = y + p["bo"]
+    return y
+
+
+# ------------------------------------------------------------------ #
+# positions
+# ------------------------------------------------------------------ #
+def rope_cos_sin(positions: jax.Array, dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., dim/2) in fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B,S,H,D); cos/sin (B,S,D/2) or (S,D/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

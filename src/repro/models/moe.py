@@ -1,0 +1,99 @@
+"""Mixture-of-Experts MLP with top-k routing and capacity-bounded
+scatter/gather dispatch (shardable: tokens over `data`, experts over
+`model`; the token→expert exchange lowers to an all-to-all under GSPMD).
+
+Supports shared (always-on) experts as in deepseek-v2 (2 shared + 160
+routed, top-6) and phi-3.5-MoE (16 routed, top-2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, mlp_apply, mlp_init
+from .sharding import shard
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(cfg: ModelConfig, key, dtype):
+    E = cfg.moe_experts
+    ks = jax.random.split(key, 3)
+    p = {
+        "router": dense_init(ks[0], cfg.d_model, E, jnp.float32, scale=0.02),
+        # experts stacked on a leading E axis
+        "experts": jax.vmap(lambda k: mlp_init(cfg, k, dtype))(
+            jax.random.split(ks[1], E)),
+    }
+    if cfg.moe_shared:
+        p["shared"] = jax.vmap(lambda k: mlp_init(cfg, k, dtype))(
+            jax.random.split(ks[2], cfg.moe_shared))
+    return p
+
+
+def _capacity(cfg: ModelConfig, T: int) -> int:
+    c = int(cfg.capacity_factor * T * cfg.moe_top_k / cfg.moe_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8
+
+
+def moe_apply(cfg: ModelConfig, p, x: jax.Array):
+    """x (B,S,D) -> (y (B,S,D), aux_loss ())."""
+    B, S, D = x.shape
+    E, K = cfg.moe_experts, cfg.moe_top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)        # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss (segment counts, no one-hot)
+    me = probs.mean(axis=0)                                 # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx[:, 0]].add(1.0) / T
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # capacity-bounded dispatch: sort-based position assignment keeps
+    # memory O(T·K) — a (T·K, E) one-hot cumsum would be ~TB-scale at
+    # prefill_32k for 160-expert models.
+    C = _capacity(cfg, T)
+    flat_e = expert_idx.reshape(-1)                         # (T*K,)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))      # (E,)
+    pos_sorted = jnp.arange(flat_e.shape[0]) - starts[sorted_e]
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+    keep = pos < C
+    gates = jnp.where(keep, gate_vals.reshape(-1), 0.0)
+
+    safe_e = jnp.where(keep, flat_e, 0)
+    safe_p = jnp.where(keep, pos, C - 1)
+    xk = jnp.repeat(xt, K, axis=0)                          # (T*K, D)
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[safe_e, safe_p].add(
+        jnp.where(keep[:, None], xk, 0).astype(x.dtype))
+    buf = shard(buf, "expert", "cap", "embed")
+
+    # expert computation via stacked einsums over the expert axis
+    ep = p["experts"]
+    h = jnp.einsum("ecd,edf->ecf", buf, ep["wi"])
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, ep["wg"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "expert", "cap", "mlp")
+    out = jnp.einsum("ecf,efd->ecd", h, ep["wo"])
+    out = shard(out, "expert", "cap", "embed")
+
+    yk = out[safe_e, safe_p]                                # (T*K, D)
+    y = (yk.astype(jnp.float32)
+         * gates[:, None]).reshape(T, K, D).sum(axis=1)
+    y = y.reshape(B, S, D)
+
+    if cfg.moe_shared:
+        for i in range(cfg.moe_shared):
+            spi = jax.tree.map(lambda a, i=i: a[i], p["shared"])
+            y = y + mlp_apply(cfg, spi, x).astype(jnp.float32)
+    return y.astype(x.dtype), aux

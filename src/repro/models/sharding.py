@@ -1,0 +1,108 @@
+"""Logical-axis sharding for model tensors (MaxText-style rules).
+
+Model code annotates activations/params with *logical* axis names; a rule
+table maps them to mesh axes.  Outside a mesh context every annotation is a
+no-op, so the same model code runs in the simulator, smoke tests, and the
+512-device dry-run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["shard", "logical_to_spec", "mesh_rules", "DEFAULT_RULES",
+           "FSDP_RULES", "current_rules"]
+
+# logical axis -> mesh axis (None = replicated)
+DEFAULT_RULES: dict[str, Optional[str]] = {
+    "batch": "data",          # per-node batch (node axis handled outside)
+    "node": "data",
+    "seq": None,
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "vocab": "model",
+    "expert": "model",
+    "cap": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "kv_seq": None,
+    "frontend": None,
+}
+
+# beyond-baseline: fully-sharded params (FSDP over the data axis on the
+# embed dim) — used by the memory-term hillclimb.
+FSDP_RULES = dict(DEFAULT_RULES, embed="data")
+
+_local = threading.local()
+
+
+def current_rules():
+    return getattr(_local, "ctx", None)
+
+
+@contextlib.contextmanager
+def mesh_rules(mesh: Mesh | None, rules: dict[str, Optional[str]] | None = None):
+    """Activate (mesh, rules) for `shard` annotations in this thread."""
+    prev = current_rules()
+    _local.ctx = (mesh, rules or DEFAULT_RULES) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _local.ctx = prev
+
+
+def _axis_size(mesh: Mesh, m) -> int:
+    if isinstance(m, (tuple, list)):
+        s = 1
+        for a in m:
+            s *= mesh.shape[a]
+        return s
+    return mesh.shape[m]
+
+
+def logical_to_spec(axes: Sequence[Optional[str]],
+                    rules: dict[str, Optional[str]],
+                    shape: Sequence[int] | None = None,
+                    mesh: Mesh | None = None) -> P:
+    used: set[str] = set()
+    spec = []
+    for i, ax in enumerate(axes):
+        m = rules.get(ax) if ax else None
+        if m is not None:
+            flat = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+            if any(a in used for a in flat):
+                m = None
+            elif shape is not None and mesh is not None \
+                    and shape[i] % _axis_size(mesh, flat):
+                m = None    # axis does not divide this dim: best-effort drop
+            else:
+                used.update(flat)
+        spec.append(m)
+    return P(*spec)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Best-effort logical sharding annotation; no-op without an active
+    mesh, and skipped entirely when no axis maps (avoids forcing full
+    replication via an all-None constraint)."""
+    ctx = current_rules()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if x.ndim != len(axes):
+        raise ValueError(f"rank {x.ndim} vs axes {axes}")
+    spec = logical_to_spec(axes, rules, x.shape, mesh)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, rules, *axes: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(axes, rules))

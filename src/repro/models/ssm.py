@@ -1,0 +1,132 @@
+"""Mamba-1 selective SSM block (falcon-mamba / hymba's SSM heads).
+
+Training/prefill uses a chunk-free ``lax.scan`` over time with an
+O(B·d_inner·N) carry (no (S, d, N) materialization).  Decode carries
+(conv window, ssm state) and costs O(d_inner·N) per token — the reason
+``long_500k`` runs on SSM/hybrid archs.
+
+The Pallas ``ssm_scan`` kernel implements the same recurrence with chunked
+VMEM tiling; ``selective_scan_ref`` here is its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+from .sharding import shard
+
+__all__ = ["ssm_init", "ssm_apply", "ssm_decode", "ssm_cache",
+           "selective_scan_ref"]
+
+
+def ssm_init(cfg: ModelConfig, key, dtype):
+    d, di, N, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   * (cfg.ssm_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * N, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "A_log": jnp.log(A),                        # (di, N) fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def selective_scan_ref(u, dt, A, Bc, Cc, D, h0=None):
+    """Oracle selective scan.
+
+    u (B,S,di) inputs; dt (B,S,di) timestep; A (di,N); Bc/Cc (B,S,N);
+    D (di,).  Returns (y (B,S,di), h_last (B,di,N)).
+    """
+    Bsz, S, di = u.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, di, N), jnp.float32)
+
+    def step(h, inp):
+        u_t, dt_t, B_t, C_t = inp       # (B,di) (B,di) (B,N) (B,N)
+        dA = jnp.exp(dt_t[..., None] * A[None])            # (B,di,N)
+        dB = dt_t[..., None] * B_t[:, None, :]             # (B,di,N)
+        h = dA * h + dB * u_t[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(u, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cc, 1, 0).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + u.astype(jnp.float32) * D[None, None]
+    return y, h
+
+
+def _conv_causal(x, w, b):
+    """Depthwise causal conv1d: x (B,S,di), w (K,di)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(K))
+    return y + b[None, None]
+
+
+def _ssm_inner(cfg, p, xz, conv_fn, h0=None):
+    di = cfg.d_inner
+    x, z = xz[..., :di], xz[..., di:]
+    x = shard(x, "batch", "seq", "ssm_inner")
+    x = jax.nn.silu(conv_fn(x))
+    proj = x @ p["x_proj"]
+    dtr, N = cfg.dt_rank, cfg.ssm_state
+    dt = jax.nn.softplus(proj[..., :dtr] @ p["dt_proj"] + p["dt_bias"])
+    Bc = proj[..., dtr:dtr + N]
+    Cc = proj[..., dtr + N:]
+    A = -jnp.exp(p["A_log"])
+    y, h = selective_scan_ref(x, dt, A, Bc, Cc, p["D"], h0)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(xz.dtype)
+    return y, h, x
+
+
+def ssm_apply(cfg: ModelConfig, p, x, return_state=False):
+    """Full-sequence mamba block: x (B,S,D) -> (B,S,D).
+    ``return_state`` also returns the decode cache (conv window, h)."""
+    xz = x @ p["in_proj"]
+    y, h, _ = _ssm_inner(
+        cfg, p, xz, lambda u: _conv_causal(u, p["conv_w"], p["conv_b"]))
+    out = y @ p["out_proj"]
+    if return_state:
+        K, di = cfg.ssm_conv, cfg.d_inner
+        raw = xz[..., :di]
+        pad = jnp.pad(raw, ((0, 0), (max(0, K - 1 - raw.shape[1]), 0),
+                            (0, 0)))
+        return out, {"conv": pad[:, -(K - 1):, :] if K > 1 else
+                     jnp.zeros((x.shape[0], 0, di), xz.dtype), "h": h}
+    return out
+
+
+def ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((batch, K - 1, di), dtype),
+        "h": jnp.zeros((batch, di, N), jnp.float32),
+    }
+
+
+def ssm_decode(cfg: ModelConfig, p, x, cache):
+    """One-token decode: x (B,1,D)."""
+    di, K = cfg.d_inner, cfg.ssm_conv
+    xz = x @ p["in_proj"]
+
+    def conv_fn(u):                       # u (B,1,di)
+        win = jnp.concatenate([cache["conv"], u], axis=1)   # (B,K,di)
+        y = jnp.einsum("bkd,kd->bd", win, p["conv_w"]) + p["conv_b"]
+        return y[:, None, :]
+
+    y, h, x_conv = _ssm_inner(cfg, p, xz, conv_fn, cache["h"])
+    new_conv = jnp.concatenate(
+        [cache["conv"][:, 1:], (xz[..., :di])], axis=1) if K > 1 else cache["conv"]
+    return y @ p["out_proj"], {"conv": new_conv, "h": h}

@@ -1,0 +1,416 @@
+"""Model assembly: decoder-only / enc-dec transformers with attn, SSM,
+hybrid mixers, dense or MoE MLPs, stub modality frontends, KV-cache decode.
+
+Layers are *stacked* on a leading axis and executed with ``lax.scan`` so
+60-layer configs lower to compact HLO (the dry-run/roofline path corrects
+FLOP counts for the while-loop trip count).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import (dense_init, mlp_apply, mlp_init, norm_apply, norm_init,
+                     sinusoidal_positions)
+from .sharding import shard
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
+           "prefill", "prefill_cache"]
+
+
+# ------------------------------------------------------------------ #
+# init
+# ------------------------------------------------------------------ #
+def _layer_init(cfg: ModelConfig, key, dtype, *, cross: bool, causal_attn=True):
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {"ln1": norm_init(cfg, dtype)}
+    if cfg.mixer in ("attn", "hybrid"):
+        if cfg.attention == "mla":
+            p["attn"] = attn.mla_init(cfg, ks[0], dtype)
+        else:
+            p["attn"] = attn.gqa_init(cfg, ks[0], dtype)
+    if cfg.mixer in ("ssm", "hybrid"):
+        p["ssm"] = ssm_mod.ssm_init(cfg, ks[1], dtype)
+    if cross:
+        p["ln_cross"] = norm_init(cfg, dtype)
+        p["cross"] = attn.cross_init(cfg, ks[2], dtype)
+    if cfg.moe_experts:
+        p["ln2"] = norm_init(cfg, dtype)
+        p["mlp"] = moe_mod.moe_init(cfg, ks[3], dtype)
+    elif cfg.d_ff:
+        p["ln2"] = norm_init(cfg, dtype)
+        p["mlp"] = mlp_init(cfg, ks[3], dtype)
+    return p
+
+
+def _enc_layer_init(cfg: ModelConfig, key, dtype):
+    """Encoder layer: full (non-causal) self-attention + dense MLP."""
+    ks = jax.random.split(key, 2)
+    p = {"ln1": norm_init(cfg, dtype),
+         "attn": attn.gqa_init(cfg, ks[0], dtype),
+         "ln2": norm_init(cfg, dtype),
+         "mlp": mlp_init(cfg, ks[1], dtype)}
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "final_norm": norm_init(cfg, dtype),
+        "layers": jax.vmap(
+            lambda k: _layer_init(cfg, k, dtype, cross=cfg.enc_dec))(
+            jax.random.split(ks[1], cfg.n_layers)),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab, dtype)
+    if cfg.frontend:
+        fd = cfg.frontend_dim or cfg.d_model
+        p["frontend_proj"] = dense_init(ks[3], fd, cfg.d_model, dtype)
+    if cfg.enc_dec:
+        p["enc_layers"] = jax.vmap(
+            lambda k: _enc_layer_init(cfg, k, dtype))(
+            jax.random.split(ks[4], cfg.n_enc_layers))
+        p["enc_norm"] = norm_init(cfg, dtype)
+    return p
+
+
+
+def _scan_layers(body, carry, xs, unroll=False):
+    """lax.scan over stacked layers, or a python unroll (used by the
+    roofline's linear-in-L cost fit — XLA counts while bodies once)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    carry_out, ys = carry, []
+    for i in range(L):
+        xi = jax.tree.map(lambda a, i=i: a[i], xs)
+        carry_out, y = body(carry_out, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry_out, ys
+
+# ------------------------------------------------------------------ #
+# forward (train / full sequence)
+# ------------------------------------------------------------------ #
+def _mixer_full(cfg: ModelConfig, lp, h, positions):
+    if cfg.mixer == "ssm":
+        return ssm_mod.ssm_apply(cfg, lp["ssm"], h)
+    if cfg.attention == "mla":
+        a = attn.mla_apply(cfg, lp["attn"], h, positions,
+                           window=cfg.attn_window)
+    else:
+        a = attn.gqa_apply(cfg, lp["attn"], h, positions,
+                           window=cfg.attn_window)
+    if cfg.mixer == "hybrid":
+        s = ssm_mod.ssm_apply(cfg, lp["ssm"], h)
+        return 0.5 * (a + s)
+    return a
+
+
+def _layer_full(cfg: ModelConfig, lp, x, positions, enc=None, remat=False):
+    def f(x):
+        h = norm_apply(cfg, lp["ln1"], x)
+        x1 = x + _mixer_full(cfg, lp, h, positions)
+        if enc is not None:
+            hc = norm_apply(cfg, lp["ln_cross"], x1)
+            k, v = attn.cross_kv(cfg, lp["cross"], enc)
+            x1 = x1 + attn.cross_apply(cfg, lp["cross"], hc, k, v)
+        aux = jnp.zeros((), jnp.float32)
+        if "mlp" in lp:
+            h2 = norm_apply(cfg, lp["ln2"], x1)
+            if cfg.moe_experts:
+                y, aux = moe_mod.moe_apply(cfg, lp["mlp"], h2)
+            else:
+                y = mlp_apply(cfg, lp["mlp"], h2)
+            x1 = x1 + y
+        return shard(x1, "batch", "seq", "embed"), aux
+    if remat:
+        f = jax.checkpoint(f)
+    return f(x)
+
+
+def _run_encoder(cfg: ModelConfig, params, frontend, remat, unroll=False):
+    e = frontend @ params["frontend_proj"]
+    F = e.shape[1]
+    e = e + sinusoidal_positions(jnp.arange(F), cfg.d_model).astype(e.dtype)
+    positions = jnp.arange(F)
+
+    def body(x, lp):
+        h = norm_apply(cfg, lp["ln1"], x)
+        x = x + attn.gqa_apply(cfg, lp["attn"], h, positions, causal=False)
+        h2 = norm_apply(cfg, lp["ln2"], x)
+        x = x + mlp_apply(cfg, lp["mlp"], h2)
+        return shard(x, "batch", "seq", "embed"), None
+
+    fn = jax.checkpoint(lambda x, lp: body(x, lp)) if remat else body
+    e, _ = _scan_layers(fn, e, params["enc_layers"], unroll)
+    return norm_apply(cfg, params["enc_norm"], e)
+
+
+def forward(cfg: ModelConfig, params, tokens, frontend=None, *, remat=False,
+            last_only=False, unroll=False):
+    """tokens (B, S_text); frontend (B, F, fd) stub embeddings.
+
+    Decoder-only VLM/audio-less: frontend rows are *prepended* to the token
+    sequence.  Enc-dec: frontend feeds the encoder; tokens the decoder.
+    ``last_only`` returns logits for the final position only (prefill
+    serving: materializing (B, 32k, V) logits would be TB-scale).
+    Returns (logits over the token positions, aux_loss).
+    """
+    x = params["embed"][tokens]
+    enc = None
+    n_front = 0
+    if cfg.frontend and not cfg.enc_dec and frontend is not None:
+        fx = frontend @ params["frontend_proj"]
+        x = jnp.concatenate([fx.astype(x.dtype), x], axis=1)
+        n_front = frontend.shape[1]
+    if cfg.enc_dec:
+        enc = _run_encoder(cfg, params, frontend, remat, unroll)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    if not cfg.use_rope:
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+    x = shard(x, "batch", "seq", "embed")
+
+    def body(carry, lp):
+        y, aux = _layer_full(cfg, lp, carry, positions, enc=enc, remat=remat)
+        return y, aux
+
+    x, auxs = _scan_layers(body, x, params["layers"], unroll)
+    x = norm_apply(cfg, params["final_norm"], x)
+    if last_only:
+        x = x[:, -1:]
+    elif n_front:
+        x = x[:, n_front:]
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, auxs.sum()
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, labels, frontend=None, *,
+            remat=False, unroll=False, ce: str = "lse"):
+    """ce="lse": CE via logsumexp — never materializes the fp32
+    (B,S,V) log-prob tensor (only (B,S) reductions are fp32).
+    ce="full": the naive fp32 log_softmax (kept for §Perf comparison)."""
+    logits, aux = forward(cfg, params, tokens, frontend, remat=remat,
+                          unroll=unroll)
+    if ce == "full":
+        lf = logits.astype(jnp.float32)
+        ll = jax.nn.log_softmax(lf, axis=-1)
+        nll = -jnp.take_along_axis(ll, labels[..., None], axis=-1)[..., 0]
+        return nll.mean() + aux
+    lse = jax.scipy.special.logsumexp(
+        logits.astype(jnp.float32), axis=-1)             # (B, S) fp32
+    tgt = jnp.take_along_axis(logits, labels[..., None],
+                              axis=-1)[..., 0].astype(jnp.float32)
+    return (lse - tgt).mean() + aux
+
+
+# ------------------------------------------------------------------ #
+# decode (serve_step)
+# ------------------------------------------------------------------ #
+def _mixer_cache(cfg: ModelConfig, batch: int, capacity: int, dtype):
+    c: dict[str, Any] = {}
+    if cfg.mixer in ("attn", "hybrid"):
+        if cfg.attention == "mla":
+            c["attn"] = attn.mla_cache(cfg, batch, capacity, dtype)
+        else:
+            c["attn"] = attn.gqa_cache(cfg, batch, capacity, dtype)
+    if cfg.mixer in ("ssm", "hybrid"):
+        c["ssm"] = ssm_mod.ssm_cache(cfg, batch, dtype)
+    return c
+
+
+def cache_capacity(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.mixer == "ssm":
+        return 1                                  # no KV cache at all
+    return min(cfg.attn_window or max_len, max_len)
+
+
+def init_cache(cfg: ModelConfig, params, batch: int, max_len: int,
+               dtype=jnp.float32, frontend=None):
+    C = cache_capacity(cfg, max_len)
+    cache: dict[str, Any] = {
+        "idx": jnp.zeros((), jnp.int32),
+        "slot_pos": jnp.full((C,), -1, jnp.int32),
+        "layers": jax.vmap(lambda _: _mixer_cache(cfg, batch, C, dtype))(
+            jnp.arange(cfg.n_layers)),
+    }
+    if cfg.enc_dec:
+        enc = _run_encoder(cfg, params, frontend, False)
+        ck = jax.vmap(lambda lp: attn.cross_kv(cfg, lp, enc),
+                      in_axes=(0,))(params["layers"]["cross"])
+        cache["cross_k"], cache["cross_v"] = ck
+    return cache
+
+
+def _mixer_decode(cfg: ModelConfig, lp, lc, h, pos, slot_pos):
+    new_lc = dict(lc)
+    if cfg.mixer == "ssm":
+        y, new_lc["ssm"] = ssm_mod.ssm_decode(cfg, lp["ssm"], h, lc["ssm"])
+        return y, new_lc
+    dec = attn.mla_decode if cfg.attention == "mla" else attn.gqa_decode
+    a, new_lc["attn"] = dec(cfg, lp["attn"], h, lc["attn"], pos, slot_pos,
+                            window=cfg.attn_window)
+    if cfg.mixer == "hybrid":
+        s, new_lc["ssm"] = ssm_mod.ssm_decode(cfg, lp["ssm"], h, lc["ssm"])
+        a = 0.5 * (a + s)
+    return a, new_lc
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, *, unroll=False):
+    """token (B, 1) -> (logits (B, 1, V), new cache)."""
+    pos = cache["idx"]
+    C = cache["slot_pos"].shape[0]
+    slot_pos = cache["slot_pos"].at[pos % C].set(pos)
+
+    x = params["embed"][token]
+    if not cfg.use_rope:
+        x = x + sinusoidal_positions(pos[None], cfg.d_model).astype(x.dtype)
+
+    has_cross = cfg.enc_dec
+
+    def body(x, scanned):
+        lp, lc, *ckv = scanned
+        h = norm_apply(cfg, lp["ln1"], x)
+        y, new_lc = _mixer_decode(cfg, lp, lc, h, pos, slot_pos)
+        x = x + y
+        if has_cross:
+            hc = norm_apply(cfg, lp["ln_cross"], x)
+            x = x + attn.cross_decode(cfg, lp["cross"], hc, ckv[0], ckv[1])
+        if "mlp" in lp:
+            h2 = norm_apply(cfg, lp["ln2"], x)
+            if cfg.moe_experts:
+                y2, _ = moe_mod.moe_apply(cfg, lp["mlp"], h2)
+            else:
+                y2 = mlp_apply(cfg, lp["mlp"], h2)
+            x = x + y2
+        return x, new_lc
+
+    scanned = (params["layers"], cache["layers"])
+    if has_cross:
+        scanned = scanned + (cache["cross_k"], cache["cross_v"])
+    x, new_layer_caches = _scan_layers(body, x, scanned, unroll)
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    new_cache = dict(cache)
+    new_cache["idx"] = pos + 1
+    new_cache["slot_pos"] = slot_pos
+    new_cache["layers"] = new_layer_caches
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, cache, tokens):
+    """Token-by-token prefill (test helper; production would batch this)."""
+    def step(cache, tok):
+        logits, cache = decode_step(cfg, params, cache, tok[:, None])
+        return cache, logits[:, 0]
+    cache, logits = jax.lax.scan(step, cache, jnp.moveaxis(tokens, 1, 0))
+    return cache, jnp.moveaxis(logits, 0, 1)
+
+
+def prefill_cache(cfg: ModelConfig, params, tokens, max_len: int,
+                  dtype=jnp.float32, frontend=None):
+    """Batched prefill: ONE full forward fills the decode cache.
+
+    Returns (cache with idx = S_total, last-position logits (B, 1, V)).
+    Equivalent to token-by-token ``prefill`` (tested) at full-sequence
+    throughput — what a real serving system runs before decode.
+    """
+    x = params["embed"][tokens]
+    enc = None
+    if cfg.frontend and not cfg.enc_dec and frontend is not None:
+        fx = frontend @ params["frontend_proj"]
+        x = jnp.concatenate([fx.astype(x.dtype), x], axis=1)
+    if cfg.enc_dec:
+        enc = _run_encoder(cfg, params, frontend, False)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    if not cfg.use_rope:
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+    x = shard(x, "batch", "seq", "embed")
+    C = cache_capacity(cfg, max_len)
+
+    def mixer_contrib(lp, h):
+        lc = {}
+        if cfg.mixer == "ssm":
+            y, lc["ssm"] = ssm_mod.ssm_apply(cfg, lp["ssm"], h,
+                                             return_state=True)
+            return y, lc
+        if cfg.attention == "mla":
+            a, (c, kr) = attn.mla_apply(cfg, lp["attn"], h, positions,
+                                        window=cfg.attn_window,
+                                        return_kv=True)
+            lc["attn"] = {"c": _to_ring(c, C, dtype),
+                          "kr": _to_ring(kr, C, dtype)}
+        else:
+            a, (k, v) = attn.gqa_apply(cfg, lp["attn"], h, positions,
+                                       window=cfg.attn_window,
+                                       return_kv=True)
+            lc["attn"] = {"k": _to_ring(k, C, dtype),
+                          "v": _to_ring(v, C, dtype)}
+        if cfg.mixer == "hybrid":
+            sy, lc["ssm"] = ssm_mod.ssm_apply(cfg, lp["ssm"], h,
+                                              return_state=True)
+            a = 0.5 * (a + sy)
+        return a, lc
+
+    def body(xc, lp):
+        h = norm_apply(cfg, lp["ln1"], xc)
+        y, lc = mixer_contrib(lp, h)
+        xc = xc + y
+        if cfg.enc_dec:
+            hc = norm_apply(cfg, lp["ln_cross"], xc)
+            k, v = attn.cross_kv(cfg, lp["cross"], enc)
+            xc = xc + attn.cross_apply(cfg, lp["cross"], hc, k, v)
+        if "mlp" in lp:
+            h2 = norm_apply(cfg, lp["ln2"], xc)
+            if cfg.moe_experts:
+                y2, _ = moe_mod.moe_apply(cfg, lp["mlp"], h2)
+            else:
+                y2 = mlp_apply(cfg, lp["mlp"], h2)
+            xc = xc + y2
+        return shard(xc, "batch", "seq", "embed"), lc
+
+    x, layer_caches = jax.lax.scan(body, x, params["layers"])
+    x = norm_apply(cfg, params["final_norm"], x)[:, -1:]
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+
+    slot_pos = jnp.full((C,), -1, jnp.int32)
+    n_fill = min(S, C)
+    filled = jnp.arange(S - n_fill, S, dtype=jnp.int32)
+    slot_pos = slot_pos.at[filled % C].set(filled)
+    cache = {"idx": jnp.asarray(S, jnp.int32), "slot_pos": slot_pos,
+             "layers": layer_caches}
+    if cfg.enc_dec:
+        ck = jax.vmap(lambda lp: attn.cross_kv(cfg, lp, enc),
+                      in_axes=(0,))(params["layers"]["cross"])
+        cache["cross_k"], cache["cross_v"] = ck
+    return cache, logits
+
+
+def _to_ring(t, C: int, dtype):
+    """Place the last min(S, C) positions of t (B, S, ...) into a C-slot
+    ring buffer at slots pos % C (matching decode's write pattern)."""
+    B, S = t.shape[0], t.shape[1]
+    n = min(S, C)
+    tail = t[:, S - n:].astype(dtype)                # positions S-n .. S-1
+    buf = jnp.zeros((B, C) + t.shape[2:], dtype)
+    slots = (jnp.arange(S - n, S) % C).astype(jnp.int32)
+    return buf.at[:, slots].set(tail)

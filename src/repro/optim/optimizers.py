@@ -1,0 +1,79 @@
+"""Minimal pytree optimizers (optax-style init/update pairs).
+
+R-FAST composes as the *distribution* layer: the tracked direction ``z``
+replaces the raw gradient fed to the local optimizer.  The paper's ResNet
+experiments use SGD + momentum 0.9 + weight decay 1e-4; we provide that
+plus AdamW for the transformer examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr)
+
+
+def sgd(lr, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        g = _lr_at(lr, step)
+        new = jax.tree.map(
+            lambda p, gr: p - g * (gr + weight_decay * p), params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    """Polyak heavy-ball, the paper's ResNet-50 setup (β=0.9, wd=1e-4)."""
+
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, m, params, step):
+        g = _lr_at(lr, step)
+        m = jax.tree.map(
+            lambda mm, gr, p: beta * mm + gr + weight_decay * p,
+            m, grads, params)
+        new = jax.tree.map(lambda p, mm: p - g * mm, params, m)
+        return new, m
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(jnp.zeros_like, params)
+        return (z, jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params, step):
+        m, v = state
+        g = _lr_at(lr, step)
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda mm, gr: b1 * mm + (1 - b1) * gr, m, grads)
+        v = jax.tree.map(lambda vv, gr: b2 * vv + (1 - b2) * gr * gr, v, grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        new = jax.tree.map(
+            lambda p, mm, vv: p - g * (
+                (mm / bc1) / (jnp.sqrt(vv / bc2) + eps) + weight_decay * p),
+            params, m, v)
+        return new, (m, v)
+
+    return Optimizer(init, update)

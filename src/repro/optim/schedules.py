@@ -1,0 +1,32 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay(lr: float, decay: float = 0.1, every: int = 30):
+    """Paper §VI-B: initial 0.1, ×0.1 every 30 epochs."""
+    def fn(step):
+        k = jnp.floor(step.astype(jnp.float32) / every)
+        return jnp.asarray(lr, jnp.float32) * decay ** k
+    return fn
+
+
+def cosine(lr: float, total: int, final: float = 0.0):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / total, 0.0, 1.0)
+        return final + 0.5 * (lr - final) * (1 + jnp.cos(jnp.pi * t))
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, final: float = 0.0):
+    cos = cosine(lr, max(1, total - warmup), final)
+    def fn(step):
+        s = step.astype(jnp.float32)
+        wu = lr * s / max(1, warmup)
+        return jnp.where(s < warmup, wu, cos(s - warmup))
+    return fn

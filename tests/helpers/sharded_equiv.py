@@ -1,0 +1,135 @@
+"""Subprocess helper: run dense vs ppermute R-FAST runtimes on an 8-device
+host-platform mesh and assert bit-level agreement + convergence.
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import binary_tree  # noqa: E402
+from repro.core.runtime import (edge_arrays, init_node_state,  # noqa: E402
+                                make_rfast_round)
+from repro.core.runtime_sharded import (init_sharded_state,  # noqa: E402
+                                        make_sharded_round)
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    n, p = 4, 16
+    topo = binary_tree(n)
+    rng = np.random.default_rng(0)
+    C = jnp.asarray(rng.normal(0, 1, (n, p)), jnp.float32)
+    S = jnp.asarray(rng.uniform(0.5, 2.0, (n, 1)), jnp.float32)
+
+    def grad_fn(params, batch, key):
+        c, s = batch
+        g = {"w": s * (params["w"] - c)}
+        return 0.5 * jnp.sum(s * (params["w"] - c) ** 2), g
+
+    batches = (C, S)
+    params = {"w": jnp.zeros((p,), jnp.float32)}
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    gamma = 0.06
+
+    # dense reference (single-device semantics)
+    spec = edge_arrays(topo)
+    st_d = init_node_state(spec, params, grad_fn, batches,
+                           jax.random.PRNGKey(0))
+    dense = jax.jit(make_rfast_round(spec, grad_fn, gamma=gamma))
+
+    # sharded ppermute runtime on the mesh
+    st_s = init_sharded_state(topo, params, grad_fn, batches, keys)
+    put = lambda tree: jax.tree.map(
+        lambda l: jax.device_put(l, NamedSharding(
+            mesh, P("data", *([None] * (l.ndim - 1))))), tree)
+    st_s = st_s._replace(
+        x=put(st_s.x), z=put(st_s.z), g_prev=put(st_s.g_prev),
+        rho_out=put(st_s.rho_out), rho_buf=put(st_s.rho_buf))
+    batches_d = put(batches)
+    sharded = jax.jit(make_sharded_round(topo, grad_fn, mesh, gamma=gamma,
+                                         node_axes=("data",)))
+
+    for t in range(200):
+        # Block between the single-device and 8-device programs: on a CPU
+        # host with fewer cores than devices, interleaving them starves
+        # the collective rendezvous (all device threads must join).
+        st_d, md = dense(st_d, batches, keys, None)
+        jax.block_until_ready(st_d.x["w"])
+        st_s, ms = sharded(st_s, batches_d, keys, None)
+        jax.block_until_ready(st_s.x["w"])
+
+    xd = np.asarray(st_d.x["w"])
+    xs = np.asarray(st_s.x["w"])
+    err = np.abs(xd - xs).max()
+    assert err < 1e-4, f"dense vs sharded mismatch: {err}"
+
+    x_star = np.asarray((S * C).sum(0) / S.sum(0))
+    conv = np.abs(xs - x_star[None]).max()
+    assert conv < 1e-2, f"sharded runtime did not converge: {conv}"
+    # total tracked-mass invariant on the sharded layout
+    mass = (np.asarray(st_s.z["w"]).sum(0)
+            + (np.asarray(st_s.rho_out["w"])
+               - np.asarray(st_s.rho_buf["w"])).sum((0, 1)))
+    gsum = np.asarray(st_s.g_prev["w"]).sum(0)
+    np.testing.assert_allclose(mass, gsum, rtol=1e-4, atol=1e-4)
+    print(f"OK dense-vs-sharded err={err:.2e} conv={conv:.2e}")
+
+
+def robust_mode():
+    """Robust (masked) sharded runtime: mass conservation under loss."""
+    import numpy as np
+    from repro.core import binary_tree
+    from repro.core.runtime_sharded import (init_sharded_state,
+                                            make_sharded_round, _slot_tables)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    n, p = 4, 8
+    topo = binary_tree(n)
+    slots_w, slots_a, *_ = _slot_tables(topo)
+    S = len(slots_w) + len(slots_a)
+    rng = np.random.default_rng(1)
+    C = jnp.asarray(rng.normal(0, 1, (n, p)), jnp.float32)
+
+    def gf(params, batch, key):
+        c = batch
+        return 0.5 * jnp.sum((params["w"] - c) ** 2), \
+            {"w": params["w"] - c}
+
+    params = {"w": jnp.zeros((p,), jnp.float32)}
+    keys = jax.random.split(jax.random.PRNGKey(1), n)
+    st = init_sharded_state(topo, params, gf, C, keys, robust=True)
+    put = lambda t: jax.tree.map(lambda l: jax.device_put(
+        l, NamedSharding(mesh, P("data", *([None] * (l.ndim - 1))))), t)
+    st = st._replace(x=put(st.x), z=put(st.z), g_prev=put(st.g_prev),
+                     rho_out=put(st.rho_out), rho_buf=put(st.rho_buf),
+                     mail_v=put(st.mail_v))
+    rf = jax.jit(make_sharded_round(topo, gf, mesh, gamma=0.05,
+                                    node_axes=("data",), robust=True))
+    for t in range(300):
+        masks = jnp.asarray(
+            (rng.uniform(size=(n, S)) > 0.3), jnp.float32)
+        st, _ = rf(st, put(C), keys, masks)
+        jax.block_until_ready(st.x["w"])
+    # Lemma 3 on the slotted layout
+    mass = (np.asarray(st.z["w"]).sum(0)
+            + (np.asarray(st.rho_out["w"])
+               - np.asarray(st.rho_buf["w"])).sum((0, 1)))
+    gsum = np.asarray(st.g_prev["w"]).sum(0)
+    np.testing.assert_allclose(mass, gsum, rtol=1e-4, atol=1e-4)
+    # converges to x* despite 30% loss
+    x_star = np.asarray(C.mean(0))
+    err = np.abs(np.asarray(st.x["w"]) - x_star[None]).max()
+    assert err < 5e-2, err
+    print(f"OK robust sharded runtime: loss-mass conserved, conv={err:.2e}")
+
+
+if __name__ == "__main__":
+    main()
+    robust_mode()

@@ -1,0 +1,49 @@
+"""Subprocess helper: build input specs for ALL 10 archs × 4 shapes on a
+(4,4) mesh and validate every sharding divides its dims (no compile —
+fast regression net for the spec machinery)."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, get_config  # noqa: E402
+from repro.launch.specs import SHAPES, build_case, shape_supported  # noqa: E402
+
+
+def check_tree(tree, where):
+    def chk(leaf):
+        sh = getattr(leaf, "sharding", None)
+        if sh is None:
+            return
+        spec = sh.spec
+        mesh = sh.mesh
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 10):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert dim % n == 0, (where, leaf.shape, spec)
+    jax.tree.map(chk, tree)
+
+
+def main():
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    n_ok = n_skip = 0
+    for arch in ARCHS[:10]:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, _ = shape_supported(cfg, shape)
+            if not ok:
+                n_skip += 1
+                continue
+            fn, args = build_case(cfg, mesh, shape)
+            check_tree(args, (arch, shape))
+            n_ok += 1
+    print(f"SPECS-ALL-PASS ok={n_ok} skip={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

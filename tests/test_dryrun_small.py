@@ -1,0 +1,36 @@
+"""CI-scale dry-run: lower+compile reduced configs on a 16-device
+host-platform mesh in a subprocess (full production sweep is
+``python -m repro.launch.dryrun --all --both-meshes``)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_small_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join("tests", "helpers", "dryrun_small.py")],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "DRYRUN-SMALL-PASS" in r.stdout
+
+
+@pytest.mark.slow
+def test_specs_all_archs_subprocess():
+    """All 10 archs x 4 shapes: spec construction + sharding divisibility
+    (struct-level, no compile)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join("tests", "helpers", "specs_all.py")],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "SPECS-ALL-PASS" in r.stdout

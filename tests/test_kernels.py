@@ -1,0 +1,160 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.rfast_update.ops import rfast_update
+from repro.kernels.ssm_scan.ops import selective_scan
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(0, scale, shape), dtype)
+
+
+# ------------------------------------------------------------------ #
+# rfast_update
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("P", [37, 1000, 32768, 100_001])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rfast_update_sweep(P, dtype):
+    Kw, Ka, Ko = 2, 3, 2
+    kw = dict(
+        x=_arr(P, dtype), z=_arr(P, dtype), g_new=_arr(P, dtype),
+        g_old=_arr(P, dtype), v_in=_arr((Kw, P), dtype),
+        w_in=jnp.asarray([0.25, 0.25]), rho_in=_arr((Ka, P), dtype),
+        rho_buf=_arr((Ka, P), dtype), mask=jnp.asarray([1.0, 0.0, 1.0]),
+        rho_out=_arr((Ko, P), dtype), a_out=jnp.asarray([0.3, 0.2]),
+        gamma=0.01, w_self=0.5, a_self=0.5)
+    ref = rfast_update(**kw, impl="ref")
+    pal = rfast_update(**kw, impl="pallas")
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    for r, p in zip(ref, pal):
+        np.testing.assert_allclose(np.asarray(r, np.float32),
+                                   np.asarray(p, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(P=st.integers(1, 5000), Kw=st.integers(1, 4), Ka=st.integers(1, 4),
+       Ko=st.integers(1, 4), seed=st.integers(0, 100))
+def test_rfast_update_property(P, Kw, Ka, Ko, seed):
+    r = np.random.default_rng(seed)
+    a = lambda *s: jnp.asarray(r.normal(0, 1, s), jnp.float32)
+    kw = dict(x=a(P), z=a(P), g_new=a(P), g_old=a(P), v_in=a(Kw, P),
+              w_in=jnp.asarray(r.uniform(0, .5, Kw), jnp.float32),
+              rho_in=a(Ka, P), rho_buf=a(Ka, P),
+              mask=jnp.asarray(r.integers(0, 2, Ka), jnp.float32),
+              rho_out=a(Ko, P),
+              a_out=jnp.asarray(r.uniform(0, .5, Ko), jnp.float32),
+              gamma=float(r.uniform(0, .1)), w_self=0.5, a_self=0.5)
+    ref = rfast_update(**kw, impl="ref")
+    pal = rfast_update(**kw, impl="pallas")
+    for x, y in zip(ref, pal):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# flash attention
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("B,S,H,KV,D", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (1, 512, 4, 1, 128),    # MQA
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, KV, D, causal, window, dtype):
+    q, k, v = _arr((B, S, H, D), dtype), _arr((B, S, KV, D), dtype), \
+        _arr((B, S, KV, D), dtype)
+    r = flash_attention(q, k, v, causal=causal, window=window, impl="ref")
+    p = flash_attention(q, k, v, causal=causal, window=window, impl="pallas",
+                        bq=128, bk=128)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(r, np.float32),
+                               np.asarray(p, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_sizes():
+    q, k, v = _arr((1, 256, 2, 64)), _arr((1, 256, 2, 64)), _arr((1, 256, 2, 64))
+    r = flash_attention(q, k, v, impl="ref")
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        p = flash_attention(q, k, v, impl="pallas", bq=bq, bk=bk)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(p),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------ #
+# ssm scan
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("B,S,di,N,chunk,bd", [
+    (1, 64, 16, 8, 16, 16),
+    (2, 128, 64, 16, 32, 32),
+    (1, 256, 32, 16, 256, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_sweep(B, S, di, N, chunk, bd, dtype):
+    u = _arr((B, S, di), dtype)
+    dt = jnp.asarray(RNG.uniform(1e-3, 0.1, (B, S, di)), dtype)
+    A = -jnp.asarray(RNG.uniform(0.5, 2, (di, N)), jnp.float32)
+    Bc, Cc = _arr((B, S, N), dtype), _arr((B, S, N), dtype)
+    D = _arr((di,))
+    yr, hr = selective_scan(u, dt, A, Bc, Cc, D, impl="ref")
+    yp, hp = selective_scan(u, dt, A, Bc, Cc, D, impl="pallas",
+                            chunk=chunk, bd=bd)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(yp), rtol=tol,
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(hr), np.asarray(hp), rtol=tol,
+                               atol=tol)
+
+
+def test_ssm_scan_chunking_invariance():
+    """Chunk size must not change the result (carry correctness)."""
+    B, S, di, N = 1, 128, 16, 8
+    u = _arr((B, S, di))
+    dt = jnp.asarray(RNG.uniform(1e-3, 0.1, (B, S, di)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2, (di, N)), jnp.float32)
+    Bc, Cc, D = _arr((B, S, N)), _arr((B, S, N)), _arr((di,))
+    outs = [selective_scan(u, dt, A, Bc, Cc, D, impl="pallas", chunk=c,
+                           bd=16)[0] for c in (8, 32, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ #
+# flash attention backward (custom VJP with Pallas dq/dkv kernels)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+@pytest.mark.parametrize("B,H,S,D", [(1, 2, 128, 32), (2, 2, 256, 64)])
+def test_flash_attention_backward(B, H, S, D, causal, window):
+    from repro.kernels.flash_attention.backward import flash_attention_vjp
+    from repro.kernels.flash_attention.ref import attention_ref
+    rng = np.random.default_rng(1)
+    mk = lambda: jnp.asarray(rng.normal(0, 1, (B, H, S, D)), jnp.float32)
+    q, k, v, w = mk(), mk(), mk(), mk()
+
+    def f_flash(q_, k_, v_):
+        return jnp.sum(flash_attention_vjp(
+            q_, k_, v_, causal, window, None, 64, 64, True) * w)
+
+    def f_ref(q_, k_, v_):
+        o = attention_ref(q_.transpose(0, 2, 1, 3),
+                          k_.transpose(0, 2, 1, 3),
+                          v_.transpose(0, 2, 1, 3),
+                          causal=causal, window=window)
+        return jnp.sum(o.transpose(0, 2, 1, 3) * w)
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,104 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    TOPOLOGIES, get_topology, generate_schedule, round_robin_schedule,
+    run_rfast, tracked_mass,
+)
+
+TOPO_NAMES = sorted(set(TOPOLOGIES) - {"parameter_server"})
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    name=st.sampled_from(sorted(TOPOLOGIES)),
+    n=st.integers(min_value=2, max_value=16),
+)
+def test_builders_always_satisfy_assumptions(name, n):
+    topo = get_topology(name, n)   # __post_init__ validates Assumptions 1-2
+    assert topo.roots()
+    # all nonzero weights bounded below (Assumption 1i second clause)
+    for M in (topo.W, topo.A):
+        nz = M[M > 0]
+        assert nz.min() >= 1.0 / (2 * n)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    name=st.sampled_from(TOPO_NAMES),
+    n=st.integers(min_value=3, max_value=9),
+    loss=st.floats(min_value=0.0, max_value=0.6),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_schedule_is_valid_assumption_3(name, n, loss, seed):
+    topo = get_topology(name, n)
+    K = 40 * n
+    sched = generate_schedule(topo, K, loss_prob=loss, latency=1.0, seed=seed)
+    # (i) every node activates infinitely often with bounded gaps
+    assert sched.T >= n
+    assert set(np.unique(sched.agent)) == set(range(n))
+    # (ii) bounded delays AT CONSUMPTION (edges into the active node);
+    # stamps never exceed the current iteration
+    dst_w = np.array([i for _, i in topo.edges_W()] or [0])
+    dst_a = np.array([i for _, i in topo.edges_A()] or [0])
+    for k in range(K):
+        assert np.all(sched.stamp_v[k] <= k)
+        assert np.all(sched.stamp_rho[k] <= k)
+        a = sched.agent[k]
+        assert np.all((k - sched.stamp_v[k])[dst_w == a] <= sched.D)
+        assert np.all((k - sched.stamp_rho[k])[dst_a == a] <= sched.D)
+    # monotone per-edge stamps (largest-received semantics)
+    assert np.all(np.diff(sched.stamp_v, axis=0) >= 0)
+    assert np.all(np.diff(sched.stamp_rho, axis=0) >= 0)
+    # virtual time strictly progresses on each node's own clock
+    for i in range(n):
+        ti = sched.times[sched.agent == i]
+        assert np.all(np.diff(ti) > 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    name=st.sampled_from(TOPO_NAMES),
+    n=st.integers(min_value=3, max_value=8),
+    loss=st.floats(min_value=0.0, max_value=0.5),
+    noise=st.floats(min_value=0.0, max_value=0.5),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_mass_conservation_lemma3(name, n, loss, noise, seed):
+    """Lemma 3 holds for ANY topology/schedule/loss/noise combination."""
+    import jax
+
+    topo = get_topology(name, n)
+    p, K = 4, 25 * n
+    rng = np.random.default_rng(seed)
+    C = jnp.asarray(rng.normal(0, 1, (n, p)), jnp.float32)
+
+    def gfn(i, x, key):
+        g = x - C[i]
+        return g + noise * jax.random.normal(key, x.shape) if noise else g
+
+    sched = generate_schedule(topo, K, loss_prob=loss, latency=1.5,
+                              compute_time=rng.uniform(0.5, 3.0, n),
+                              seed=seed)
+    state, _ = run_rfast(topo, sched, gfn, jnp.zeros((n, p)), gamma=0.01,
+                         seed=seed)
+    np.testing.assert_allclose(
+        np.asarray(tracked_mass(state)),
+        np.asarray(state.g_prev.sum(axis=0)),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(min_value=2, max_value=12),
+       rounds=st.integers(min_value=1, max_value=5))
+def test_round_robin_delay_bound(n, rounds):
+    """Remark 2: synchronous schedule has D <= 2n - 2 and T = n."""
+    topo = get_topology("directed_ring", n)
+    sched = round_robin_schedule(topo, rounds)
+    assert sched.T == n
+    assert sched.D <= 2 * n - 2
+    for k in range(sched.K):
+        assert np.all(sched.stamp_v[k] <= k)

@@ -1,0 +1,228 @@
+"""Global-view simulator tests: exactness, invariants, convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    binary_tree, directed_ring, exponential, get_topology,
+    generate_schedule, round_robin_schedule,
+    run_rfast, init_state, rfast_scan, tracked_mass,
+)
+from repro.core.baselines import run_push_pull_sync
+from repro.data import make_logistic_problem
+
+jax.config.update("jax_enable_x64", False)
+
+
+def quad_grad_fn(n: int, p: int, *, noise: float = 0.0, seed: int = 0):
+    """Deterministic-heterogeneous quadratic: f_i = 0.5|x - c_i|^2 * s_i."""
+    rng = np.random.default_rng(seed)
+    C = jnp.asarray(rng.normal(0, 1, (n, p)), jnp.float32)
+    S = jnp.asarray(rng.uniform(0.5, 2.0, (n, 1)), jnp.float32)
+
+    def gfn(i, x, key):
+        g = S[i] * (x - C[i])
+        if noise > 0:
+            g = g + noise * jax.random.normal(key, x.shape)
+        return g
+
+    x_star = (S * C).sum(0) / S.sum(0)
+    return gfn, x_star
+
+
+# ------------------------------------------------------------------ #
+# Remark 2: round-robin schedule == lockstep synchronous R-FAST
+# ------------------------------------------------------------------ #
+def sync_rfast_reference(topo, grad_fn, x0, gamma, rounds):
+    """Numpy lockstep Algorithm 1 with τ = t (Remark 2 semantics)."""
+    n = topo.n
+    W, A = topo.W, topo.A
+    x = np.array(x0, np.float64)
+    p = x.shape[1]
+    v = np.zeros((n, p))
+    dummy = jax.random.PRNGKey(0)
+    g_prev = np.stack([np.asarray(grad_fn(i, jnp.asarray(x[i], jnp.float32),
+                                          dummy), np.float64)
+                       for i in range(n)])
+    z = g_prev.copy()
+    ea = topo.edges_A()
+    rho = {e: np.zeros(p) for e in ea}      # held at sender
+    rho_buf = {e: np.zeros(p) for e in ea}  # held at receiver
+
+    for _t in range(rounds):
+        v_new = x - gamma * z                       # S1 for all nodes
+        x_new = np.zeros_like(x)
+        for i in range(n):
+            x_new[i] = W[i, i] * v_new[i]
+            for j in topo.in_neighbors_W(i):
+                x_new[i] += W[i, j] * v[j]          # τ = t: previous round's v
+        z_new = np.zeros_like(z)
+        rho_new = {e: rho[e].copy() for e in ea}
+        buf_new = {e: rho_buf[e].copy() for e in ea}
+        g_new = np.zeros_like(g_prev)
+        for i in range(n):
+            g_new[i] = np.asarray(
+                grad_fn(i, jnp.asarray(x_new[i], jnp.float32), dummy),
+                np.float64)
+            z_half = z[i] + g_new[i] - g_prev[i]
+            for j in topo.in_neighbors_A(i):
+                z_half = z_half + rho[(j, i)] - rho_buf[(j, i)]
+                buf_new[(j, i)] = rho[(j, i)].copy()
+            z_new[i] = A[i, i] * z_half
+            for j in topo.out_neighbors_A(i):
+                rho_new[(i, j)] = rho_new[(i, j)] + A[j, i] * z_half
+        x, v, z, g_prev = x_new, v_new, z_new, g_new
+        rho, rho_buf = rho_new, buf_new
+    return x
+
+
+@pytest.mark.parametrize("builder", [binary_tree, directed_ring])
+def test_round_robin_matches_sync_reference(builder):
+    n, p, rounds = 5, 6, 12
+    topo = builder(n)
+    gfn, _ = quad_grad_fn(n, p)
+    x0 = jnp.asarray(np.random.default_rng(1).normal(0, 1, (n, p)),
+                     jnp.float32)
+    sched = round_robin_schedule(topo, rounds)
+    state, _ = run_rfast(topo, sched, gfn, x0, gamma=0.05)
+    ref = sync_rfast_reference(topo, gfn, np.asarray(x0), 0.05, rounds)
+    np.testing.assert_allclose(np.asarray(state.x), ref, rtol=2e-4, atol=2e-5)
+
+
+# ------------------------------------------------------------------ #
+# Lemma 3: mass conservation under arbitrary delays AND packet loss
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("loss", [0.0, 0.3])
+@pytest.mark.parametrize("builder", [binary_tree, directed_ring, exponential])
+def test_mass_conservation(builder, loss):
+    n, p, K = 7, 5, 400
+    topo = builder(n)
+    gfn, _ = quad_grad_fn(n, p, noise=0.1)
+    sched = generate_schedule(topo, K, loss_prob=loss, latency=0.7,
+                              compute_time=[1.0] * (n - 1) + [3.0], seed=3)
+    x0 = jnp.zeros((n, p), jnp.float32)
+    state, _ = run_rfast(topo, sched, gfn, x0, gamma=0.02)
+    lhs = np.asarray(tracked_mass(state))
+    rhs = np.asarray(state.g_prev.sum(axis=0))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# Convergence: strongly convex => tight neighborhood of x*
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("name,K", [("binary_tree", 6000), ("line", 6000),
+                                    ("directed_ring", 6000),
+                                    ("exponential", 12000), ("mesh2d", 6000)])
+def test_convergence_all_topologies(name, K):
+    """Paper Fig. 4a: R-FAST converges on all five topologies."""
+    n, p = 7, 8
+    topo = get_topology(name, n)
+    gfn, x_star = quad_grad_fn(n, p)   # deterministic => exact convergence
+    sched = generate_schedule(topo, K, latency=0.5, seed=0)
+    x0 = jnp.zeros((n, p), jnp.float32)
+    state, _ = run_rfast(topo, sched, gfn, x0, gamma=0.03)
+    err = np.linalg.norm(np.asarray(state.x) - np.asarray(x_star)[None],
+                         axis=1).max()
+    assert err < 1e-2, f"{name}: err={err}"
+
+
+def test_convergence_under_packet_loss():
+    n, p, K = 7, 8, 9000
+    topo = binary_tree(n)
+    gfn, x_star = quad_grad_fn(n, p)
+    sched = generate_schedule(topo, K, loss_prob=0.25, latency=0.5, seed=1)
+    x0 = jnp.zeros((n, p), jnp.float32)
+    state, _ = run_rfast(topo, sched, gfn, x0, gamma=0.03)
+    err = np.linalg.norm(np.asarray(state.x) - np.asarray(x_star)[None],
+                         axis=1).max()
+    assert err < 2e-2, f"err={err}"
+
+
+def test_heterogeneity_free_fixed_point():
+    """Gradient tracking kills the data-heterogeneity bias (Remark 7):
+    with deterministic gradients the fixed point is x*, independent of how
+    heterogeneous the c_i are (unlike D-PSGD which biases)."""
+    n, p, K = 5, 4, 8000
+    topo = directed_ring(n)
+    rng = np.random.default_rng(5)
+    # extremely heterogeneous optima
+    C = jnp.asarray(rng.normal(0, 10, (n, p)), jnp.float32)
+
+    def gfn(i, x, key):
+        return x - C[i]
+
+    x_star = C.mean(0)
+    sched = generate_schedule(topo, K, latency=0.4, seed=2)
+    state, _ = run_rfast(topo, sched, gfn, jnp.zeros((n, p)), gamma=0.04)
+    err = np.abs(np.asarray(state.x) - np.asarray(x_star)[None]).max()
+    assert err < 5e-2, f"err={err}"
+
+
+# ------------------------------------------------------------------ #
+# Logistic regression (paper §VI-A): loss decreases to near-optimal
+# ------------------------------------------------------------------ #
+def test_logistic_regression_training():
+    n = 7
+    prob = make_logistic_problem(n, m=700, d=20, batch=16,
+                                 heterogeneous=True, seed=0)
+    topo = binary_tree(n)
+    sched = generate_schedule(topo, 4000, latency=0.5, seed=0)
+    x0 = jnp.zeros((n, prob.p), jnp.float32)
+    state, _ = run_rfast(topo, sched, prob.grad_fn(), x0, gamma=5e-3)
+    x_star = prob.optimum()
+    f_star = float(prob.mean_loss(x_star))
+    f_end = float(prob.mean_loss(jnp.asarray(state.x).mean(0)))
+    assert f_end < f_star + 0.05, (f_end, f_star)
+    assert float(prob.accuracy(jnp.asarray(state.x).mean(0))) > 0.9
+
+
+# ------------------------------------------------------------------ #
+# Sync push-pull baseline sanity (eq. 2)
+# ------------------------------------------------------------------ #
+def test_push_pull_sync_geometric():
+    n, p = 5, 6
+    topo = directed_ring(n)
+    gfn, x_star = quad_grad_fn(n, p)
+    x0 = jnp.zeros((n, p), jnp.float32)
+    x, _ = run_push_pull_sync(topo, gfn, x0, gamma=0.08, rounds=800)
+    err = np.linalg.norm(np.asarray(x) - np.asarray(x_star)[None], axis=1).max()
+    assert err < 1e-3, err
+
+
+def test_multi_root_parameter_server_topology():
+    """Appendix G / Fig. 15: multiple common roots (PS-like structure with
+    3 servers) — R-FAST converges over it."""
+    from repro.core import parameter_server
+    n, p, K = 9, 6, 9000
+    topo = parameter_server(n, n_servers=3)
+    assert len(topo.roots()) >= 3
+    gfn, x_star = quad_grad_fn(n, p)
+    sched = generate_schedule(topo, K, latency=0.4, seed=4)
+    state, _ = run_rfast(topo, sched, gfn, jnp.zeros((n, p)), gamma=0.03)
+    err = np.linalg.norm(np.asarray(state.x) - np.asarray(x_star)[None],
+                         axis=1).max()
+    assert err < 2e-2, err
+
+
+def test_node_crash_and_recovery():
+    """Beyond-paper robustness probe: a node crashes for a long window
+    (bounded downtime => Assumption 3 with a larger realized T); the
+    running-sum ρ delivers the accumulated mass on recovery and the
+    system still converges to x*."""
+    n, p, K = 7, 6, 14000
+    topo = binary_tree(n)
+    gfn, x_star = quad_grad_fn(n, p)
+    sched = generate_schedule(topo, K, latency=0.4, seed=6,
+                              failures=[(3, 100.0, 400.0)])
+    # node 3 really is silent inside the window
+    t = sched.times[sched.agent == 3]
+    assert not np.any((t > 101.0) & (t < 399.0))
+    state, _ = run_rfast(topo, sched, gfn, jnp.zeros((n, p)), gamma=0.03)
+    # mass conservation survived the outage
+    np.testing.assert_allclose(
+        np.asarray(tracked_mass(state)),
+        np.asarray(state.g_prev.sum(axis=0)), rtol=1e-4, atol=1e-4)
+    err = np.linalg.norm(np.asarray(state.x) - np.asarray(x_star)[None],
+                         axis=1).max()
+    assert err < 2e-2, err

@@ -1,0 +1,83 @@
+"""Optimizers, schedules, checkpointing, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, latest_step, save_checkpoint
+from repro.data.pipeline import LMShardConfig, node_batch
+from repro.optim import adamw, constant, cosine, momentum, sgd, step_decay, warmup_cosine
+
+
+def _params():
+    return {"w": jnp.ones((3, 4)), "b": jnp.zeros(4),
+            "nested": {"s": jnp.full((2,), 2.0)}}
+
+
+@pytest.mark.parametrize("opt_fn", [
+    lambda: sgd(0.1), lambda: momentum(0.1, 0.9), lambda: adamw(0.05)])
+def test_optimizers_descend_quadratic(opt_fn):
+    opt = opt_fn()
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    for step in range(800):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.asarray(step))
+    assert float(loss(params)) < 1e-3
+
+
+def test_schedules():
+    s = jnp.asarray(0)
+    assert float(constant(0.1)(s)) == pytest.approx(0.1)
+    assert float(step_decay(0.1, 0.1, 30)(jnp.asarray(31))) == pytest.approx(0.01)
+    assert float(cosine(1.0, 100)(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+    assert float(warmup_cosine(1.0, 10, 100)(jnp.asarray(5))) == pytest.approx(0.5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = _params()
+    save_checkpoint(d, 7, tree)
+    save_checkpoint(d, 12, jax.tree.map(lambda x: x + 1, tree))
+    assert latest_step(d) == 12
+    back = load_checkpoint(d, tree)
+    np.testing.assert_allclose(back["w"], np.asarray(tree["w"]) + 1)
+    back7 = load_checkpoint(d, tree, step=7)
+    np.testing.assert_allclose(back7["nested"]["s"], [2.0, 2.0])
+
+
+def test_checkpoint_structure_mismatch(tmp_path):
+    d = str(tmp_path / "c2")
+    save_checkpoint(d, 1, _params())
+    with pytest.raises(ValueError):
+        load_checkpoint(d, {"other": jnp.zeros(1)})
+
+
+def test_node_batches_disjoint_and_deterministic():
+    cfg = LMShardConfig(vocab=100, batch_per_node=2, seq_len=8, n_nodes=4)
+    t0a, l0a = node_batch(cfg, 0, 0)
+    t0b, _ = node_batch(cfg, 0, 0)
+    t1, _ = node_batch(cfg, 1, 0)
+    np.testing.assert_array_equal(t0a, t0b)
+    assert not np.array_equal(t0a, t1)
+    assert t0a.shape == (2, 8)
+    np.testing.assert_array_equal(l0a[:, :-1], t0a[:, 1:])
+
+
+def test_metrics_logger_roundtrip(tmp_path):
+    from repro.metrics import MetricsLogger, StepTimer, read_metrics
+    path = str(tmp_path / "m.jsonl")
+    with MetricsLogger(path, flush_every=2) as lg:
+        lg.log(1, loss=2.5)
+        lg.log(2, loss=2.0, note="x")
+    recs = list(read_metrics(path))
+    assert [r["step"] for r in recs] == [1, 2]
+    assert recs[0]["loss"] == 2.5
+    assert recs[1]["note"] == "x"
+    t = StepTimer()
+    for _ in range(3):
+        t.tick()
+    assert t.steps_per_sec >= 0

@@ -1,0 +1,68 @@
+"""Topology + weight matrix tests (Assumptions 1-2)."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+
+
+ALL_BUILDERS = ["binary_tree", "line", "directed_ring", "undirected_ring",
+                "exponential", "mesh2d", "parameter_server"]
+
+
+@pytest.mark.parametrize("name", ALL_BUILDERS)
+@pytest.mark.parametrize("n", [3, 7, 15])
+def test_stochasticity_and_roots(name, n):
+    topo = T.get_topology(name, n)
+    assert np.allclose(topo.W.sum(axis=1), 1.0)
+    assert np.allclose(topo.A.sum(axis=0), 1.0)
+    assert np.all(np.diag(topo.W) > 0)
+    assert np.all(np.diag(topo.A) > 0)
+    assert topo.roots(), "Assumption 2 violated: no common root"
+
+
+def test_binary_tree_root_is_zero():
+    topo = T.binary_tree(7)
+    assert 0 in topo.roots()
+    # tree: every non-root has exactly one in-neighbor in W
+    for i in range(1, 7):
+        assert len(topo.in_neighbors_W(i)) == 1
+
+
+def test_tree_graphs_are_not_strongly_connected():
+    """Assumption 2 is weaker than strong connectivity (Remark 1)."""
+    topo = T.binary_tree(7)
+    # node 0 (root) is NOT reachable from leaves in G(W)
+    assert len(T.spanning_tree_roots(topo.W)) == 1
+    # but the reversed push graph has the same single root
+    assert T.common_roots(topo.W, topo.A) == [0]
+
+
+def test_validate_rejects_bad_matrices():
+    n = 4
+    W = np.full((n, n), 1.0 / n)
+    A = np.full((n, n), 1.0 / n)
+    T.validate_weights(W, A)  # fine
+    bad = W.copy(); bad[0, 0] = 0.0; bad[0, 1] = 2.0 / n
+    with pytest.raises(ValueError):
+        T.validate_weights(bad, A)
+    with pytest.raises(ValueError):
+        T.validate_weights(W, W * 0.9)  # not column stochastic
+    # no common root: two disconnected self-loop components
+    W2 = np.eye(n); A2 = np.eye(n)
+    with pytest.raises(ValueError):
+        T.validate_weights(W2, A2)
+
+
+def test_edges_convention():
+    topo = T.directed_ring(4)
+    # ring: j -> j+1; so in W, node i pulls from i-1
+    assert (0, 1) in topo.edges_W()
+    assert (3, 0) in topo.edges_W()
+    assert topo.in_neighbors_W(2) == [1]
+    assert topo.out_neighbors_A(2) == [3]
+
+
+def test_ps_structure_common_roots():
+    topo = T.parameter_server(8, n_servers=2)
+    roots = topo.roots()
+    assert set(roots) >= {0, 1}
