@@ -24,9 +24,59 @@ def _time(fn, *args, reps=3, **kw):
     return (time.time() - t0) / reps * 1e6
 
 
-def run() -> list[str]:
+def _protocol_round_rows(impl: str | None) -> list[str]:
+    """End-to-end protocol round: the fused kernel in its real hot path.
+
+    Times ``make_rfast_round`` with the requested backend(s) on a robust
+    (masked) round over a binary tree, and cross-checks jnp vs pallas
+    agreement — the wiring the ``--impl pallas`` train path exercises.
+    """
+    from repro.core import binary_tree
+    from repro.core.plan import build_comm_plan
+    from repro.core.runtime import init_node_state, make_rfast_round
+
+    n, p = 8, 1 << 16
+    topo = binary_tree(n)
+    plan = build_comm_plan(topo)
+    rng = np.random.default_rng(1)
+    C = jnp.asarray(rng.normal(0, 1, (n, p)), jnp.float32)
+
+    def grad_fn(params, batch, key):
+        del key
+        d = params["w"] - batch
+        return 0.5 * jnp.sum(d * d), {"w": d}
+
+    params = {"w": jnp.zeros((p,), jnp.float32)}
+    key = jax.random.PRNGKey(0)
+    state = init_node_state(plan, params, grad_fn, C, key, robust=True)
+    keys = jax.random.split(key, n)
+    masks = jnp.asarray(rng.uniform(size=plan.e_pad) > 0.3, jnp.float32)
+
+    # An explicit --impl restricts execution to that backend (escape hatch
+    # for platforms where the other one is broken or slow); the jnp-vs-
+    # pallas cross-check row only runs when both backends are in play.
+    impls = (impl,) if impl else ("jnp", "pallas")
+    rows, outs = [], {}
+    for im in impls:
+        rf = jax.jit(make_rfast_round(plan, grad_fn, gamma=0.01,
+                                      robust=True, impl=im))
+        outs[im] = rf(state, C, keys, masks)[0]
+        us = _time(rf, state, C, keys, masks)
+        rows.append(csv_row(f"protocol/round_{im}_{n}x{p>>10}k", us,
+                            f"impl={im}"))
+    if len(impls) == 2:
+        err = max(float(jnp.abs(getattr(outs["jnp"], f)["w"]
+                                - getattr(outs["pallas"], f)["w"]).max())
+                  for f in ("x", "z", "rho", "rho_buf"))
+        # agreement row, not a timing: nan -> null in the --json artifact
+        rows.append(csv_row("protocol/round_jnp_vs_pallas", float("nan"),
+                            f"maxerr={err:.1e}"))
+    return rows
+
+
+def run(impl: str | None = None) -> list[str]:
     rng = np.random.default_rng(0)
-    rows = []
+    rows = _protocol_round_rows(impl)
 
     P = 1 << 20
     a = lambda *s: jnp.asarray(rng.normal(0, 1, s), jnp.float32)

@@ -1,12 +1,29 @@
 """Benchmark suite driver — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (plus a header comment per
-section).  ``--quick`` shrinks iteration counts for CI.
+section).  ``--quick`` shrinks iteration counts for CI.  ``--json PATH``
+additionally writes the rows as structured JSON so perf trajectories can
+be committed (e.g. ``BENCH_2026-07-30.json``) and diffed across PRs.
+``--impl`` selects the protocol backend timed by the kernels suite.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+
+
+def _row_to_record(suite: str, row: str) -> dict:
+    import math
+    name, us, derived = row.split(",", 2)
+    try:
+        us_val: float | None = float(us)
+    except ValueError:
+        us_val = None
+    if us_val is not None and not math.isfinite(us_val):
+        us_val = None        # keep the JSON artifact strictly parseable
+    return {"suite": suite, "name": name, "us_per_call": us_val,
+            "derived": derived}
 
 
 def main() -> None:
@@ -15,10 +32,22 @@ def main() -> None:
                     help="comma-separated subset: topologies,scaling,"
                          "straggler,packet_loss,heterogeneity,kernels")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--impl", default="",
+                    help="protocol backend for the kernels-suite round "
+                         "benchmark (default: both; see "
+                         "repro.core.protocol.IMPLS)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write results as JSON (commit as "
+                         "BENCH_*.json for perf trajectories)")
     args = ap.parse_args()
+
+    from repro.core.protocol import IMPLS
 
     from . import (bench_heterogeneity, bench_kernels, bench_packet_loss,
                    bench_scaling, bench_straggler, bench_topologies)
+
+    if args.impl and args.impl not in IMPLS:
+        ap.error(f"--impl must be one of {IMPLS}, got {args.impl!r}")
 
     suites = {
         "topologies": lambda: bench_topologies.run(
@@ -30,10 +59,11 @@ def main() -> None:
             K=5000 if args.quick else 14_000),
         "heterogeneity": lambda: bench_heterogeneity.run(
             K=4000 if args.quick else 12_000),
-        "kernels": lambda: bench_kernels.run(),
+        "kernels": lambda: bench_kernels.run(impl=args.impl or None),
     }
     only = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")
+    records: list[dict] = []
     failed = False
     for name, fn in suites.items():
         if only and name not in only:
@@ -42,9 +72,19 @@ def main() -> None:
         try:
             for row in fn():
                 print(row, flush=True)
+                records.append(_row_to_record(name, row))
         except Exception as e:  # noqa: BLE001
             failed = True
-            print(f"{name},nan,ERROR:{type(e).__name__}:{e}")
+            row = f"{name},nan,ERROR:{type(e).__name__}:{e}"
+            print(row)
+            records.append(_row_to_record(name, row))
+    if args.json:
+        meta = {"quick": bool(args.quick), "impl": args.impl or "both",
+                "only": only}
+        with open(args.json, "w") as f:
+            json.dump({"meta": meta, "rows": records}, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(records)} rows to {args.json}", file=sys.stderr)
     if failed:
         raise SystemExit(1)
 

@@ -1,9 +1,20 @@
-"""R-FAST core: topology, schedules, the global-view simulator, baselines,
-and the production shard_map runtime."""
+"""R-FAST core: topology, the CommPlan/protocol substrate, schedules, the
+global-view simulator, baselines, and the production shard_map runtime.
+
+Layering (DESIGN.md): ``Topology`` -> :class:`CommPlan` (one static
+edge-plan extraction) -> :mod:`protocol` (the single S.1–S.5 update, with
+``jnp``/``pallas`` backends) -> execution engines (``simulator``,
+``runtime``, ``runtime_sharded``)."""
 from .topology import (  # noqa: F401
     Topology, get_topology, binary_tree, line, directed_ring,
     undirected_ring, exponential, mesh2d, parameter_server, TOPOLOGIES,
     validate_weights, spanning_tree_roots, common_roots,
+)
+from .plan import CommPlan, build_comm_plan, matchings  # noqa: F401
+from .protocol import (  # noqa: F401
+    ProtocolState, init_protocol_state, make_protocol_round,
+    protocol_tracked_mass, descent_step, momentum_mix, consensus_mix,
+    tracking_step, mailbox_merge, IMPLS,
 )
 from .schedule import Schedule, generate_schedule, round_robin_schedule  # noqa: F401
 from .simulator import (  # noqa: F401

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .protocol import descent_step, tracking_step
 from .topology import Topology
 
 GradFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
@@ -103,6 +104,10 @@ def run_push_pull_sync(
     """Synchronous push-pull (eq. 2): the paper's S-AB-style ancestor.
 
     x^{t+1} = W (x^t − γ z^t);  z^{t+1} = A z^t + ∇F(x^{t+1}) − ∇F(x^t).
+
+    The per-round formulas are the protocol core's S.1/S.2b steps in
+    matrix form (``recv = 0``: mixing happens through A z, not running
+    sums) — eq. (2) is the all-delivered, zero-delay limit of R-FAST.
     """
     n = topo.n
     W = jnp.asarray(topo.W, jnp.float32)
@@ -116,9 +121,9 @@ def run_push_pull_sync(
 
     def round_fn(carry, key):
         x, z, g = carry
-        x_new = W @ (x - gamma * z)
+        x_new = W @ descent_step(x, z, gamma)                  # S.1 + S.2a
         g_new = _vgrads(grad_fn, x_new, key)
-        z_new = A @ z + g_new - g
+        z_new = tracking_step(A @ z, 0.0, g_new, g)            # S.2b
         return (x_new, z_new, g_new)
 
     carry, metrics = _run_rounds(round_fn, (x0, g0, g0), rounds, seed,

@@ -1,0 +1,410 @@
+"""The R-FAST protocol core: ONE implementation of the S.1–S.5 update.
+
+Algorithm 2's recursion, written once and consumed by every execution
+engine:
+
+  S.1   v_i = x_i − γ ẑ_i                       (ẑ = momentum-mixed z)
+  S.2a  x_i⁺ = w_ii v_i + Σ_j w_ij recv_ij       (masked consensus pull,
+                                                  mailbox reuse on loss)
+  S.2b  z½  = z_i + Σ_j m_ij (ρ_ji − ρ̃_ji) + ∇f_i(x⁺;ζ) − ∇f_i(x;ζ⁻)
+  S.2c  z_i⁺ = a_ii z½ ;  ρ_ij += a_ji z½        (push running sums)
+  S.4   ρ̃_ji ← ρ_ji  where delivered             (buffer commit)
+
+Two interchangeable backends, selected with ``impl``:
+
+* ``"jnp"``    — batched scatter/gather over the dense padded edge arrays
+  of a :class:`~repro.core.plan.CommPlan`.  Bit-identical to the historic
+  ``runtime.make_rfast_round`` math; the path GSPMD partitions best.
+* ``"pallas"`` — per-node neighbour stacks routed through the fused
+  ``kernels/rfast_update`` Pallas kernel (one VMEM-resident sweep instead
+  of ~8 HBM passes), vmapped over the node axis.  ``interpret`` defaults
+  to True off-TPU so the same code runs everywhere.
+
+The gradient is sampled at the *mixed* point x⁺ (S.2b), so the consensus
+pull runs before the fused commit kernel in both backends; the kernel then
+performs the whole protocol-state commit (z, ρ, ρ̃ — the bandwidth-bound
+part) in a single fused pass.
+
+Scalar building blocks (``descent_step`` …) are exported for engines whose
+execution structure is not a dense SPMD round (the global-view simulator's
+per-agent stale reads, the shard_map runtime's per-matching ppermutes, the
+synchronous baselines): the protocol *math* lives here even when the data
+movement cannot.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .plan import CommPlan
+from ..kernels.rfast_update.ops import rfast_update
+
+__all__ = [
+    "ProtocolState", "VGradFn", "make_protocol_round", "init_protocol_state",
+    "protocol_tracked_mass", "descent_step", "momentum_mix", "consensus_mix",
+    "tracking_step", "mailbox_merge", "IMPLS",
+]
+
+IMPLS = ("jnp", "pallas")
+
+VGradFn = Callable[[Any, Any, Any], tuple[jnp.ndarray, Any]]
+# vgrads(x_stacked, batches, keys) -> (losses, grads): node-vmapped by the
+# calling engine (which owns spmd_axis_name / sharding concerns).
+
+
+# --------------------------------------------------------------------- #
+# scalar building blocks — the protocol formulas, written once
+# --------------------------------------------------------------------- #
+def descent_step(x, z, lr):
+    """S.1: local descent direction v = x − γ z."""
+    return x - lr * z
+
+
+def momentum_mix(m, z, beta):
+    """Heavy-ball mix of the tracked direction: m⁺ = β m + z."""
+    return beta * m + z
+
+
+def consensus_mix(w_self, v_self, w_in, v_in):
+    """S.2a: x⁺ = w_ii v_i + Σ_k w_in[k] · v_in[k] (sum over leading axis)."""
+    return w_self * v_self + jnp.sum(w_in * v_in, axis=0)
+
+
+def tracking_step(z, recv, g_new, g_old):
+    """S.2b: robust gradient tracking z½ = z + recv + g_new − g_old."""
+    return z + recv + g_new - g_old
+
+
+def mailbox_merge(new, old, mask):
+    """Masked commit (S.2a mailboxes / S.4 buffers): m·new + (1−m)·old."""
+    return mask * new + (1 - mask) * old
+
+
+# --------------------------------------------------------------------- #
+# protocol state
+# --------------------------------------------------------------------- #
+class ProtocolState(NamedTuple):
+    """Stacked per-node protocol state (leading N axis; ρ arrays E_pad)."""
+
+    step: jnp.ndarray
+    x: Any          # (N, ...) pytree
+    z: Any
+    g_prev: Any
+    rho: Any        # (E_pad, ...) pytree — sender running sums
+    rho_buf: Any    # (E_pad, ...) pytree — receiver buffers
+    mail_v: Any     # (E_pad, ...) pytree or None (sync mode)
+    m: Any          # momentum buffers or None
+
+
+def _stack_n(tree: Any, n: int) -> Any:
+    return jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n,) + l.shape),
+                        tree)
+
+
+def init_protocol_state(
+    plan: CommPlan,
+    params: Any,
+    vgrads: VGradFn,
+    batches: Any,
+    keys: Any,
+    *,
+    robust: bool = False,
+    momentum: float = 0.0,
+    stacked: bool = False,
+) -> ProtocolState:
+    """Paper init: x_i = x0 (broadcast), z_i = g_prev_i = ∇f_i(x0; ζ0)."""
+    n, e = plan.n, plan.e_pad
+    x = params if stacked else _stack_n(params, n)
+    g0 = vgrads(x, batches, keys)[1]
+    zeros_e = jax.tree.map(
+        lambda l: jnp.zeros((e,) + l.shape[1:], l.dtype), x)
+    return ProtocolState(
+        step=jnp.zeros((), jnp.int32),
+        x=x, z=g0, g_prev=g0,
+        rho=zeros_e,
+        rho_buf=jax.tree.map(jnp.copy, zeros_e),
+        mail_v=jax.tree.map(jnp.copy, zeros_e) if robust else None,
+        m=jax.tree.map(jnp.zeros_like, x) if momentum else None,
+    )
+
+
+def protocol_tracked_mass(state: ProtocolState):
+    """Lemma-3 LHS on stacked state: Σ_i z_i + Σ_e (ρ_e − ρ̃_e)."""
+    tot_z = jax.tree.map(lambda z: z.sum(0), state.z)
+    inflight = jax.tree.map(lambda r, b: (r - b).sum(0),
+                            state.rho, state.rho_buf)
+    return jax.tree.map(lambda a, b: a + b, tot_z, inflight)
+
+
+# --------------------------------------------------------------------- #
+# the round builder
+# --------------------------------------------------------------------- #
+def make_protocol_round(
+    plan: CommPlan,
+    vgrads: VGradFn,
+    *,
+    gamma,
+    robust: bool = False,
+    momentum: float = 0.0,
+    impl: str = "jnp",
+    interpret: bool | None = None,
+):
+    """Build ``round_fn(state, batches, keys, masks) -> (state, metrics)``.
+
+    ``masks``: (E_pad,) float {0, 1} delivery indicators for BOTH graphs
+    (1 = delivered), or None for the synchronous special case (Remark 2).
+    Masks must be binary: the backends agree only on 0/1 values (the
+    fused kernel commits ρ̃ with a hard ``mask > 0`` threshold, the jnp
+    path with the blending form — identical for indicators, divergent for
+    fractional weights).  ``gamma`` may be a schedule ``step -> lr``.
+    ``impl`` selects the backend; ``interpret`` (pallas only) defaults to
+    True unless running on TPU.
+    """
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if impl == "jnp":
+        return _make_round_jnp(plan, vgrads, gamma, robust, momentum)
+    return _make_round_pallas(plan, vgrads, gamma, robust, momentum,
+                              interpret)
+
+
+# --------------------------------------------------------------------- #
+# impl="jnp": batched scatter/gather over dense padded edge arrays
+# --------------------------------------------------------------------- #
+def _make_round_jnp(plan: CommPlan, vgrads: VGradFn, gamma, robust, momentum):
+    n = plan.n
+    w_diag = jnp.asarray(plan.w_diag)
+    a_diag = jnp.asarray(plan.a_diag)
+    src_w = jnp.asarray(plan.src_w); dst_w = jnp.asarray(plan.dst_w)
+    src_a = jnp.asarray(plan.src_a); dst_a = jnp.asarray(plan.dst_a)
+    w_edge = jnp.asarray(plan.w_edge); a_edge = jnp.asarray(plan.a_edge)
+
+    def round_fn(state: ProtocolState, batches, keys, masks=None):
+        lr = gamma(state.step) if callable(gamma) else gamma
+
+        # ---- (S1) local descent direction -------------------------------
+        if momentum:
+            m = jax.tree.map(lambda mm, zz: momentum_mix(mm, zz, momentum),
+                             state.m, state.z)
+            v = jax.tree.map(lambda xx, mm: descent_step(xx, mm, lr),
+                             state.x, m)
+        else:
+            m = None
+            v = jax.tree.map(lambda xx, zz: descent_step(xx, zz, lr),
+                             state.x, state.z)
+
+        # ---- (S2a) consensus pull over G(W) ------------------------------
+        if masks is None and not robust:
+            def mix_x(vl):
+                out = w_diag.reshape((n,) + (1,) * (vl.ndim - 1)) * vl
+                contrib = w_edge.reshape((-1,) + (1,) * (vl.ndim - 1)) \
+                    * vl[src_w]
+                return out.at[dst_w].add(contrib.astype(out.dtype))
+            x_new = jax.tree.map(mix_x, v)
+            mail_v = state.mail_v
+        else:
+            mk = jnp.ones((plan.e_pad,), jnp.float32) if masks is None \
+                else masks
+            def mix_robust(vl, ml):
+                mshape = (-1,) + (1,) * (vl.ndim - 1)
+                mkr = mk.reshape(mshape)
+                recv = mailbox_merge(vl[src_w], ml, mkr)
+                out = w_diag.reshape((n,) + (1,) * (vl.ndim - 1)) * vl
+                contrib = w_edge.reshape(mshape) * recv
+                return out.at[dst_w].add(contrib.astype(out.dtype)), recv
+            pairs = jax.tree.map(mix_robust, v, state.mail_v)
+            x_new = jax.tree.map(lambda p: p[0], pairs,
+                                 is_leaf=lambda q: isinstance(q, tuple))
+            mail_v = jax.tree.map(lambda p: p[1], pairs,
+                                  is_leaf=lambda q: isinstance(q, tuple))
+
+        # ---- (S2b) new gradient sample + robust tracking ------------------
+        losses, g_new = vgrads(x_new, batches, keys)
+
+        mk = jnp.ones((plan.e_pad,), jnp.float32) if masks is None else masks
+
+        def track(zl, gl_new, gl_old, rho_l, buf_l):
+            mshape = (-1,) + (1,) * (zl.ndim - 1)
+            mkr = mk.reshape(mshape)
+            diff = (mkr * (rho_l - buf_l)).astype(zl.dtype)
+            recv = jnp.zeros_like(zl).at[dst_a].add(diff)
+            z_half = tracking_step(zl, recv, gl_new, gl_old)
+            # (S2c) split mass
+            z_new = a_diag.reshape((n,) + (1,) * (zl.ndim - 1)) * z_half
+            push = a_edge.reshape(mshape) * z_half[src_a]
+            rho_new = rho_l + push.astype(rho_l.dtype)
+            # (S4) buffers take consumed values
+            buf_new = mailbox_merge(rho_l, buf_l, mkr)
+            return z_new, rho_new, buf_new
+
+        trip = jax.tree.map(track, state.z, g_new, state.g_prev,
+                            state.rho, state.rho_buf)
+        is3 = lambda q: isinstance(q, tuple)
+        z_new = jax.tree.map(lambda t: t[0], trip, is_leaf=is3)
+        rho_new = jax.tree.map(lambda t: t[1], trip, is_leaf=is3)
+        buf_new = jax.tree.map(lambda t: t[2], trip, is_leaf=is3)
+
+        new_state = ProtocolState(
+            step=state.step + 1, x=x_new, z=z_new, g_prev=g_new,
+            rho=rho_new, rho_buf=buf_new, mail_v=mail_v, m=m)
+        return new_state, {"loss": losses.mean(), "losses": losses}
+
+    return round_fn
+
+
+# --------------------------------------------------------------------- #
+# impl="pallas": per-node stacks through the fused rfast_update kernel
+# --------------------------------------------------------------------- #
+def _make_round_pallas(plan: CommPlan, vgrads: VGradFn, gamma, robust,
+                       momentum, interpret):
+    n, e_pad = plan.n, plan.e_pad
+    kw, ka, ko = plan.kw, plan.ka, plan.ko
+    w_diag = jnp.asarray(plan.w_diag)
+    a_diag = jnp.asarray(plan.a_diag)
+    src_w = jnp.asarray(plan.src_w)
+    in_w_epos = jnp.asarray(plan.in_w_epos)
+    in_w_src = jnp.asarray(plan.in_w_src)
+    in_w_wt = jnp.asarray(plan.in_w_wt)
+    in_a_epos = jnp.asarray(plan.in_a_epos)
+    in_a_val = jnp.asarray(plan.in_a_val)
+    out_a_epos = jnp.asarray(plan.out_a_epos)
+    out_a_wt = jnp.asarray(plan.out_a_wt)
+    # scatter targets: pad slots point past the edge array and are dropped
+    in_scatter = jnp.asarray(
+        np.where(plan.in_a_val > 0, plan.in_a_epos, e_pad)
+        .astype(np.int32).reshape(-1))
+    out_scatter = jnp.asarray(
+        np.where(plan.out_a_val > 0, plan.out_a_epos, e_pad)
+        .astype(np.int32).reshape(-1))
+
+    def round_fn(state: ProtocolState, batches, keys, masks=None):
+        lr = gamma(state.step) if callable(gamma) else gamma
+        robust_path = robust or masks is not None
+        mk = jnp.ones((e_pad,), jnp.float32) if masks is None else masks
+
+        # ---- (S1) local descent direction -------------------------------
+        if momentum:
+            m = jax.tree.map(lambda mm, zz: momentum_mix(mm, zz, momentum),
+                             state.m, state.z)
+            z_eff = m
+        else:
+            m = None
+            z_eff = state.z
+        v = jax.tree.map(lambda xx, zz: descent_step(xx, zz, lr),
+                         state.x, z_eff)
+
+        # ---- (S2a) mailbox merge + gathered consensus pull ----------------
+        # The gradient must be sampled AT the mixed point x⁺ (S.2b), so the
+        # pull runs here in jnp; the fused kernel below re-derives the same
+        # quantities while committing the bandwidth-bound protocol state.
+        if robust_path:
+            def edge_recv(vl, ml):
+                mshape = (-1,) + (1,) * (vl.ndim - 1)
+                mkr = mk.reshape(mshape)
+                return mailbox_merge(vl[src_w], ml, mkr)
+            vin_pool = jax.tree.map(edge_recv, v, state.mail_v)
+            mail_v = vin_pool
+            g_idx = in_w_epos
+        else:
+            vin_pool = v
+            mail_v = state.mail_v
+            g_idx = in_w_src
+        v_in = jax.tree.map(lambda pool: pool[g_idx], vin_pool)  # (N,kw,...)
+
+        def mix(vl, vin):
+            wts = in_w_wt.reshape((n, kw) + (1,) * (vl.ndim - 1))
+            wsd = w_diag.reshape((n,) + (1,) * (vl.ndim - 1))
+            return wsd * vl + jnp.sum(wts * vin, axis=1)
+        x_new = jax.tree.map(mix, v, v_in)
+
+        losses, g_new = vgrads(x_new, batches, keys)
+
+        # ---- fused commit: S.1/S.2a recompute + S.2b/c + S.4 in ONE pass --
+        # The kernel's x'/v outputs are discarded here (x⁺ is committed
+        # from the jnp pull above, the exact point the gradient saw); a
+        # kernel variant that skips those two output writes would save
+        # ~2/5 of the commit's output bandwidth on TPU — future work.
+        mask_in = mk[in_a_epos] * in_a_val          # (N, ka)
+        x_leaves = jax.tree.leaves(state.x)
+        z_leaves = jax.tree.leaves(state.z)
+        gn_leaves = jax.tree.leaves(g_new)
+        go_leaves = jax.tree.leaves(state.g_prev)
+        vin_leaves = jax.tree.leaves(v_in)
+        rho_leaves = jax.tree.leaves(state.rho)
+        buf_leaves = jax.tree.leaves(state.rho_buf)
+
+        # group leaves by dtype so each group concatenates into one flat
+        # (lead, P) vector -> a single kernel launch per group per round
+        groups: dict[tuple, list[int]] = {}
+        for i in range(len(x_leaves)):
+            key = (jnp.dtype(x_leaves[i].dtype), jnp.dtype(z_leaves[i].dtype),
+                   jnp.dtype(gn_leaves[i].dtype),
+                   jnp.dtype(rho_leaves[i].dtype))
+            groups.setdefault(key, []).append(i)
+
+        new_z: list = [None] * len(x_leaves)
+        new_rho: list = [None] * len(x_leaves)
+        new_buf: list = [None] * len(x_leaves)
+
+        def one_node(x_, z_, gn_, go_, vi_, wi_, ri_, rb_, mki_, ro_, ao_,
+                     ws_, as_):
+            return rfast_update(
+                x_, z_, gn_, go_, vi_, wi_, ri_, rb_, mki_, ro_, ao_,
+                gamma=lr, w_self=ws_, a_self=as_,
+                impl="pallas", interpret=interpret)
+
+        for idxs in groups.values():
+            flat2 = lambda ls, lead: jnp.concatenate(
+                [ls[i].reshape(lead, -1) for i in idxs], axis=1)
+            x_f = flat2(x_leaves, n)
+            z_f = flat2(z_leaves, n)
+            gn_f = flat2(gn_leaves, n)
+            go_f = flat2(go_leaves, n)
+            vin_f = jnp.concatenate(
+                [vin_leaves[i].reshape(n, kw, -1) for i in idxs], axis=2)
+            rho_f = flat2(rho_leaves, e_pad)
+            buf_f = flat2(buf_leaves, e_pad)
+
+            _, _, z_out, rout_new, rbuf_new = jax.vmap(one_node)(
+                x_f, z_f, gn_f, go_f, vin_f, in_w_wt,
+                rho_f[in_a_epos], buf_f[in_a_epos], mask_in,
+                rho_f[out_a_epos], out_a_wt, w_diag, a_diag)
+
+            # scatter per-node slot results back to the edge-major arrays
+            # (each real edge is owned by exactly one (node, slot) pair;
+            # pad slots target index e_pad and are dropped)
+            rho_new_f = rho_f.at[out_scatter].set(
+                rout_new.astype(rho_f.dtype).reshape(n * ko, -1),
+                mode="drop")
+            buf_new_f = buf_f.at[in_scatter].set(
+                rbuf_new.astype(buf_f.dtype).reshape(n * ka, -1),
+                mode="drop")
+
+            off = 0
+            for i in idxs:
+                sz = max(1, int(np.prod(z_leaves[i].shape[1:])))
+                new_z[i] = z_out[:, off:off + sz] \
+                    .reshape(z_leaves[i].shape).astype(z_leaves[i].dtype)
+                new_rho[i] = rho_new_f[:, off:off + sz] \
+                    .reshape(rho_leaves[i].shape)
+                new_buf[i] = buf_new_f[:, off:off + sz] \
+                    .reshape(buf_leaves[i].shape)
+                off += sz
+
+        zdef = jax.tree.structure(state.z)
+        new_state = ProtocolState(
+            step=state.step + 1, x=x_new,
+            z=jax.tree.unflatten(zdef, new_z),
+            g_prev=g_new,
+            rho=jax.tree.unflatten(jax.tree.structure(state.rho), new_rho),
+            rho_buf=jax.tree.unflatten(jax.tree.structure(state.rho_buf),
+                                       new_buf),
+            mail_v=mail_v, m=m)
+        return new_state, {"loss": losses.mean(), "losses": losses}
+
+    return round_fn

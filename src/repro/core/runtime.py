@@ -18,82 +18,55 @@ receiver reuses its mailbox copy and the ρ running sums recover the mass
 on the next success).  ``masks=None`` (or all-ones) is the synchronous
 special case of Remark 2 — the path used by the dry-run.
 
-Intra-node model parallelism is GSPMD: the per-node gradient is computed
-under ``jax.vmap(..., spmd_axis_name=node_axes)`` so the model's logical
-sharding annotations ('model', and 'data' when nodes live on the pod
-axis) compose with the node axis.
+This module is an *engine shell*: it owns the mesh/vmap concerns (the
+per-node gradient runs under ``jax.vmap(..., spmd_axis_name=node_axes)``
+so the model's logical sharding annotations compose with the node axis)
+and delegates all protocol math to :mod:`repro.core.protocol` over a
+:class:`repro.core.plan.CommPlan`.  ``impl="pallas"`` routes the state
+commit through the fused ``kernels/rfast_update`` Pallas kernel.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable, NamedTuple, Optional, Sequence
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from .plan import CommPlan, build_comm_plan
+from .protocol import (ProtocolState, init_protocol_state,
+                       make_protocol_round, protocol_tracked_mass)
 from .topology import Topology
 
 __all__ = ["RFASTNodeState", "RuntimeSpec", "make_rfast_round",
-           "init_node_state", "edge_arrays"]
+           "init_node_state", "edge_arrays", "runtime_tracked_mass"]
 
 GradFn = Callable[[Any, Any, jax.Array], tuple[jnp.ndarray, Any]]
 # per-node: (params, batch, key) -> (loss, grads)
 
-
-class RFASTNodeState(NamedTuple):
-    step: jnp.ndarray
-    x: Any          # (N, ...) pytree
-    z: Any
-    g_prev: Any
-    rho: Any        # (E_pad, ...) pytree
-    rho_buf: Any
-    mail_v: Any     # (E_pad, ...) pytree or None (sync mode)
-    m: Any          # momentum buffers or None
+# The runtime's state and static-spec types ARE the protocol's; the old
+# names remain the public API of this engine.
+RFASTNodeState = ProtocolState
+RuntimeSpec = CommPlan
 
 
-@dataclasses.dataclass(frozen=True)
-class RuntimeSpec:
-    """Static protocol data extracted from a Topology, padded for sharding."""
-    n: int
-    e_pad: int
-    w_diag: np.ndarray   # (N,)
-    a_diag: np.ndarray   # (N,)
-    src_w: np.ndarray; dst_w: np.ndarray; w_edge: np.ndarray  # (E_pad,)
-    src_a: np.ndarray; dst_a: np.ndarray; a_edge: np.ndarray  # (E_pad,)
+def edge_arrays(topo: Topology, e_pad: int | None = None) -> CommPlan:
+    """Topology -> CommPlan (kept name: the runtime's static spec)."""
+    return build_comm_plan(topo, e_pad)
 
 
-def edge_arrays(topo: Topology, e_pad: int | None = None) -> RuntimeSpec:
-    ew, ea = topo.edges_W(), topo.edges_A()
-    E = max(len(ew), len(ea), 1)
-    e_pad = e_pad or max(topo.n, -(-E // topo.n) * topo.n)
-
-    def pack(edges, M):
-        src = np.zeros(e_pad, np.int32)
-        dst = np.zeros(e_pad, np.int32)
-        wt = np.zeros(e_pad, np.float32)
-        for i, (j, k) in enumerate(edges):
-            src[i], dst[i], wt[i] = j, k, M[k, j]
-        return src, dst, wt
-
-    sw, dw, we = pack(ew, topo.W)
-    sa, da, ae = pack(ea, topo.A)
-    return RuntimeSpec(
-        n=topo.n, e_pad=e_pad,
-        w_diag=np.diag(topo.W).astype(np.float32),
-        a_diag=np.diag(topo.A).astype(np.float32),
-        src_w=sw, dst_w=dw, w_edge=we,
-        src_a=sa, dst_a=da, a_edge=ae,
-    )
-
-
-def _stack_n(tree: Any, n: int) -> Any:
-    return jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), tree)
+def _make_vgrads(grad_fn: GradFn, node_axes: Sequence[str]):
+    """Node-vmapped gradient: (x, batches, keys) -> (losses, grads)."""
+    spmd = None
+    if node_axes:
+        spmd = tuple(node_axes) if len(node_axes) > 1 else node_axes[0]
+    f = lambda p, b, k: grad_fn(p, b, k)
+    if spmd is not None:
+        return jax.vmap(f, spmd_axis_name=spmd)
+    return jax.vmap(f)
 
 
 def init_node_state(
-    spec: RuntimeSpec,
+    spec: CommPlan,
     params: Any,
     grad_fn: GradFn,
     batches: Any,            # (N, ...) pytree: each node's first batch
@@ -105,134 +78,38 @@ def init_node_state(
     stacked: bool = False,
 ) -> RFASTNodeState:
     """Paper init: x_i = x0 (broadcast), z_i = g_prev_i = ∇f_i(x0; ζ0)."""
-    n, e = spec.n, spec.e_pad
-    x = params if stacked else _stack_n(params, n)
-    keys = jax.random.split(key, n)
-    vg = jax.vmap(lambda p, b, k: grad_fn(p, b, k)[1])
-    if node_axes:
-        vg = jax.vmap(lambda p, b, k: grad_fn(p, b, k)[1],
-                      spmd_axis_name=tuple(node_axes) if len(node_axes) > 1
-                      else node_axes[0])
-    g0 = vg(x, batches, keys)
-    zeros_e = jax.tree.map(
-        lambda l: jnp.zeros((e,) + l.shape[1:], l.dtype), x)
-    return RFASTNodeState(
-        step=jnp.zeros((), jnp.int32),
-        x=x, z=g0, g_prev=g0,
-        rho=zeros_e,
-        rho_buf=jax.tree.map(jnp.copy, zeros_e),
-        mail_v=jax.tree.map(jnp.copy, zeros_e) if robust else None,
-        m=jax.tree.map(jnp.zeros_like, x) if momentum else None,
-    )
+    vgrads = _make_vgrads(grad_fn, node_axes)
+    keys = jax.random.split(key, spec.n)
+    return init_protocol_state(spec, params, vgrads, batches, keys,
+                               robust=robust, momentum=momentum,
+                               stacked=stacked)
 
 
 def make_rfast_round(
-    spec: RuntimeSpec,
+    spec: CommPlan,
     grad_fn: GradFn,
     *,
     gamma,
     node_axes: Sequence[str] = (),
     robust: bool = False,
     momentum: float = 0.0,
+    impl: str = "jnp",
+    interpret: bool | None = None,
 ):
     """Build ``round_fn(state, batches, keys, masks) -> (state, metrics)``.
 
     ``batches``: (N, ...) pytree of per-node minibatches.
     ``masks``: (E_pad,) float deliveries for BOTH graphs (1 = delivered) or
     None for the synchronous special case.  ``gamma`` may be a schedule.
+    ``impl``: "jnp" (GSPMD dense mixing) or "pallas" (fused update kernel).
     """
-    n = spec.n
-    w_diag = jnp.asarray(spec.w_diag)
-    a_diag = jnp.asarray(spec.a_diag)
-    src_w = jnp.asarray(spec.src_w); dst_w = jnp.asarray(spec.dst_w)
-    src_a = jnp.asarray(spec.src_a); dst_a = jnp.asarray(spec.dst_a)
-    w_edge = jnp.asarray(spec.w_edge); a_edge = jnp.asarray(spec.a_edge)
-
-    spmd = None
-    if node_axes:
-        spmd = tuple(node_axes) if len(node_axes) > 1 else node_axes[0]
-
-    def vgrads(x, batches, keys):
-        f = lambda p, b, k: grad_fn(p, b, k)
-        if spmd is not None:
-            return jax.vmap(f, spmd_axis_name=spmd)(x, batches, keys)
-        return jax.vmap(f)(x, batches, keys)
-
-    def round_fn(state: RFASTNodeState, batches, keys, masks=None):
-        lr = gamma(state.step) if callable(gamma) else gamma
-
-        # ---- (S1) local descent direction -------------------------------
-        if momentum:
-            m = jax.tree.map(lambda mm, zz: momentum * mm + zz,
-                             state.m, state.z)
-            v = jax.tree.map(lambda xx, mm: xx - lr * mm, state.x, m)
-        else:
-            m = None
-            v = jax.tree.map(lambda xx, zz: xx - lr * zz, state.x, state.z)
-
-        # ---- (S2a) consensus pull over G(W) ------------------------------
-        if masks is None and not robust:
-            def mix_x(vl):
-                out = w_diag.reshape((n,) + (1,) * (vl.ndim - 1)) * vl
-                contrib = w_edge.reshape((-1,) + (1,) * (vl.ndim - 1)) \
-                    * vl[src_w]
-                return out.at[dst_w].add(contrib.astype(out.dtype))
-            x_new = jax.tree.map(mix_x, v)
-            mail_v = state.mail_v
-        else:
-            mk = jnp.ones((spec.e_pad,), jnp.float32) if masks is None else masks
-            def mix_robust(vl, ml):
-                mshape = (-1,) + (1,) * (vl.ndim - 1)
-                mkr = mk.reshape(mshape)
-                recv = mkr * vl[src_w] + (1 - mkr) * ml
-                out = w_diag.reshape((n,) + (1,) * (vl.ndim - 1)) * vl
-                contrib = w_edge.reshape(mshape) * recv
-                return out.at[dst_w].add(contrib.astype(out.dtype)), recv
-            pairs = jax.tree.map(mix_robust, v, state.mail_v)
-            x_new = jax.tree.map(lambda p: p[0], pairs,
-                                 is_leaf=lambda q: isinstance(q, tuple))
-            mail_v = jax.tree.map(lambda p: p[1], pairs,
-                                  is_leaf=lambda q: isinstance(q, tuple))
-
-        # ---- (S2b) new gradient sample + robust tracking ------------------
-        losses, g_new = vgrads(x_new, batches, keys)
-
-        mk = jnp.ones((spec.e_pad,), jnp.float32) if masks is None else masks
-
-        def track(zl, gl_new, gl_old, rho_l, buf_l):
-            mshape = (-1,) + (1,) * (zl.ndim - 1)
-            mkr = mk.reshape(mshape)
-            diff = (mkr * (rho_l - buf_l)).astype(zl.dtype)
-            recv = jnp.zeros_like(zl).at[dst_a].add(diff)
-            z_half = zl + recv + gl_new - gl_old
-            # (S2c) split mass
-            z_new = a_diag.reshape((n,) + (1,) * (zl.ndim - 1)) * z_half
-            push = a_edge.reshape(mshape) * z_half[src_a]
-            rho_new = rho_l + push.astype(rho_l.dtype)
-            # (S4) buffers take consumed values
-            buf_new = mkr * rho_l + (1 - mkr) * buf_l
-            return z_new, rho_new, buf_new
-
-        trip = jax.tree.map(track, state.z, g_new, state.g_prev,
-                            state.rho, state.rho_buf)
-        is3 = lambda q: isinstance(q, tuple)
-        z_new = jax.tree.map(lambda t: t[0], trip, is_leaf=is3)
-        rho_new = jax.tree.map(lambda t: t[1], trip, is_leaf=is3)
-        buf_new = jax.tree.map(lambda t: t[2], trip, is_leaf=is3)
-
-        new_state = RFASTNodeState(
-            step=state.step + 1, x=x_new, z=z_new, g_prev=g_new,
-            rho=rho_new, rho_buf=buf_new, mail_v=mail_v, m=m)
-        return new_state, {"loss": losses.mean(), "losses": losses}
-
-    return round_fn
+    vgrads = _make_vgrads(grad_fn, node_axes)
+    return make_protocol_round(spec, vgrads, gamma=gamma, robust=robust,
+                               momentum=momentum, impl=impl,
+                               interpret=interpret)
 
 
 # --------------------------------------------------------------------- #
 # Lemma-3 invariant on runtime state (tested under loss masks)
 # --------------------------------------------------------------------- #
-def runtime_tracked_mass(state: RFASTNodeState):
-    tot_z = jax.tree.map(lambda z: z.sum(0), state.z)
-    inflight = jax.tree.map(lambda r, b: (r - b).sum(0),
-                            state.rho, state.rho_buf)
-    return jax.tree.map(lambda a, b: a + b, tot_z, inflight)
+runtime_tracked_mass = protocol_tracked_mass

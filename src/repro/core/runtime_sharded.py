@@ -4,13 +4,16 @@ The dense-mixing runtime (runtime.py) is protocol-faithful but lowers the
 node-axis mixing to gather/scatter that GSPMD can only realize by
 all-gathering full per-node replicas — O(N · |params|) temp memory.  Here
 the gossip is explicit: the edge sets of G(W)/G(A) are decomposed into
-*matchings* (unique sources AND destinations) and each matching becomes
-one ``ppermute`` along the node mesh axes — O(deg · |params|) traffic and
+*matchings* (unique sources AND destinations; see
+:func:`repro.core.plan.matchings`) and each matching becomes one
+``ppermute`` along the node mesh axes — O(deg · |params|) traffic and
 O(1) extra memory, exactly one inter-node hop per edge.
 
 The node axes are MANUAL (shard_map); the 'model' axis stays AUTO, so the
 per-node gradient runs the same GSPMD-sharded model code as everywhere
-else.  Protocol math is bit-identical to runtime.py (tested).
+else.  The protocol *math* is :mod:`repro.core.protocol`'s scalar steps
+over a :class:`repro.core.plan.CommPlan`'s slot tables — bit-identical to
+runtime.py (tested); only the data movement differs.
 
 State layout (node-major, padded to S slots = max degree):
   x, z, g_prev, m : (N, ...)          sharded over node axes
@@ -20,7 +23,6 @@ State layout (node-major, padded to S slots = max degree):
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
@@ -28,6 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from .plan import CommPlan, as_comm_plan, matchings  # noqa: F401  (re-export)
+from .protocol import descent_step, mailbox_merge, momentum_mix, tracking_step
 from .topology import Topology
 
 __all__ = ["ShardedState", "matchings", "make_sharded_round",
@@ -47,42 +51,44 @@ class ShardedState(NamedTuple):
     m: Any
 
 
-def matchings(edges: list[tuple[int, int]]) -> list[list[tuple[int, int]]]:
-    """Greedy decomposition into unique-source/unique-dest matchings."""
-    remaining = list(edges)
-    slots = []
-    while remaining:
-        used_s: set[int] = set()
-        used_d: set[int] = set()
-        slot, rest = [], []
-        for (j, i) in remaining:
-            if j not in used_s and i not in used_d:
-                slot.append((j, i))
-                used_s.add(j)
-                used_d.add(i)
-            else:
-                rest.append((j, i))
-        slots.append(slot)
-        remaining = rest
-    return slots
+def partial_auto_shard_map_supported() -> bool:
+    """True when shard_map can keep non-node mesh axes AUTO (GSPMD) while
+    the node axes are manual.  jax >= 0.6 exposes this as
+    ``jax.shard_map(axis_names=...)``; on 0.4.x the partial-auto mode
+    exists but its collectives hit unimplemented SPMD-partitioner paths
+    (PartitionId / manual-subgroup mismatches), so we fall back to a
+    fully-manual region there — see :func:`_shard_map`."""
+    return hasattr(jax, "shard_map")
 
 
-def _slot_tables(topo: Topology):
-    """Per-slot weight tables indexed by node id."""
-    n = topo.n
-    slots_w = matchings(topo.edges_W())
-    slots_a = matchings(topo.edges_A())
-    w_in = np.zeros((max(1, len(slots_w)), n), np.float32)
-    for s, es in enumerate(slots_w):
-        for (j, i) in es:
-            w_in[s, i] = topo.W[i, j]
-    a_out = np.zeros((max(1, len(slots_a)), n), np.float32)
-    has_in_a = np.zeros((max(1, len(slots_a)), n), np.float32)
-    for s, es in enumerate(slots_a):
-        for (j, i) in es:
-            a_out[s, j] = topo.A[i, j]
-            has_in_a[s, i] = 1.0
-    return slots_w, slots_a, w_in, a_out, has_in_a
+def _shard_map(fn, mesh, in_specs, out_specs, manual_axes):
+    """Compat shim over the two shard_map generations.
+
+    New jax: partial-auto (only ``manual_axes`` manual; 'model' stays
+    GSPMD).  jax 0.4.x: a fully-manual region with ``check_rep=False`` —
+    collectives work, but the wrapped ``fn`` must not emit sharding
+    constraints on the non-node axes (engines that need those should pick
+    the dense runtime instead; ``launch.specs`` does this automatically).
+    """
+    if partial_auto_shard_map_supported():
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(manual_axes), check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def _slot_tables(topo: Topology | CommPlan):
+    """Per-slot weight tables indexed by node id (from the CommPlan).
+
+    Compat accessor kept for external consumers (tests/helpers); the
+    round builder reads the CommPlan fields directly."""
+    plan = as_comm_plan(topo)
+    slots_w = [list(s) for s in plan.slots_w]
+    slots_a = [list(s) for s in plan.slots_a]
+    return (slots_w, slots_a, plan.w_in_table, plan.a_out_table,
+            plan.has_in_a)
 
 
 def _node_index(node_axes: Sequence[str], mesh) -> jnp.ndarray:
@@ -92,16 +98,16 @@ def _node_index(node_axes: Sequence[str], mesh) -> jnp.ndarray:
     return idx
 
 
-def init_sharded_state(topo: Topology, params: Any, grad_fn: GradFn,
+def init_sharded_state(topo: Topology | CommPlan, params: Any, grad_fn: GradFn,
                        batches: Any, keys: Any, *, momentum: float = 0.0,
                        robust: bool = False) -> ShardedState:
     """Host-side init (unsharded semantics; shard via device_put)."""
-    n = topo.n
-    slots_w, slots_a, *_ = _slot_tables(topo)
+    plan = as_comm_plan(topo)
+    n = plan.n
     x = jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n,) + l.shape),
                      params)
     g0 = jax.vmap(lambda p, b, k: grad_fn(p, b, k)[1])(x, batches, keys)
-    sa, sw = max(1, len(slots_a)), max(1, len(slots_w))
+    sa, sw = plan.s_a, plan.s_w
     zer = lambda S: jax.tree.map(
         lambda l: jnp.zeros((n, S) + l.shape, l.dtype), params)
     return ShardedState(
@@ -127,7 +133,7 @@ def sharded_state_specs(state: ShardedState, node_axes) -> ShardedState:
 
 
 def make_sharded_round(
-    topo: Topology,
+    topo: Topology | CommPlan,
     grad_fn: GradFn,
     mesh,
     *,
@@ -140,16 +146,16 @@ def make_sharded_round(
 
     ``masks``: (n, S_w + S_a) float deliveries in robust mode, else None.
     """
-    n = topo.n
-    slots_w, slots_a, w_in_t, a_out_t, has_in_t = _slot_tables(topo)
-    w_diag = jnp.asarray(np.diag(topo.W), jnp.float32)
-    a_diag = jnp.asarray(np.diag(topo.A), jnp.float32)
-    w_in_t = jnp.asarray(w_in_t)
-    a_out_t = jnp.asarray(a_out_t)
-    has_in_t = jnp.asarray(has_in_t)
+    plan = as_comm_plan(topo)
+    slots_w, slots_a = plan.slots_w, plan.slots_a
+    w_diag = jnp.asarray(plan.w_diag)
+    a_diag = jnp.asarray(plan.a_diag)
+    w_in_t = jnp.asarray(plan.w_in_table)
+    a_out_t = jnp.asarray(plan.a_out_table)
+    has_in_t = jnp.asarray(plan.has_in_a)
     na = tuple(node_axes)
     ax = na if len(na) > 1 else na[0]
-    S_w, S_a = max(1, len(slots_w)), max(1, len(slots_a))
+    S_w, S_a = plan.s_w, plan.s_a
 
     # The collectives are chained through an optimization_barrier token so
     # every device issues them in the same order — independent ppermutes
@@ -161,7 +167,7 @@ def make_sharded_round(
             return jax.tree.map(jnp.zeros_like, tree), token
         def one(l):
             l, _ = jax.lax.optimization_barrier((l, token))
-            return jax.lax.ppermute(l, ax, perm=perm)
+            return jax.lax.ppermute(l, ax, perm=list(perm))
         out = jax.tree.map(one, tree)
         new_token = jax.tree.leaves(out)[0].ravel()[:1]
         return out, new_token
@@ -175,23 +181,26 @@ def make_sharded_round(
 
         # (S1) local descent direction
         if momentum:
-            m = jax.tree.map(lambda mm, zz: momentum * mm + zz,
+            m = jax.tree.map(lambda mm, zz: momentum_mix(mm, zz, momentum),
                              state.m, state.z)
-            v = jax.tree.map(lambda xx, mm: xx - lr * mm, state.x, m)
+            v = jax.tree.map(lambda xx, mm: descent_step(xx, mm, lr),
+                             state.x, m)
         else:
             m = None
-            v = jax.tree.map(lambda xx, zz: xx - lr * zz, state.x, state.z)
+            v = jax.tree.map(lambda xx, zz: descent_step(xx, zz, lr),
+                             state.x, state.z)
 
         # (S2a) consensus pull: one ppermute per W-matching
         x_new = jax.tree.map(lambda vv: w_diag[idx] * vv, v)
         mail_new = [] if robust else None
         for s in range(S_w):
-            rv, token = tperm(v, slots_w[s], token)
+            rv, token = tperm(v, slots_w[s] if s < len(slots_w) else [],
+                              token)
             if robust:
                 mk = masks[0, s] if masks is not None else 1.0
                 old = jax.tree.map(lambda l: l[:, s], state.mail_v)
                 rv = jax.tree.map(
-                    lambda r, o: mk * r + (1 - mk) * o, rv, old)
+                    lambda r, o: mailbox_merge(r, o, mk), rv, old)
                 mail_new.append(rv)
             x_new = jax.tree.map(
                 lambda xn, r: xn + (w_in_t[s, idx] * r).astype(xn.dtype),
@@ -207,7 +216,8 @@ def make_sharded_round(
         for s in range(S_a):
             rr, token = tperm(jax.tree.map(lambda l: l[:, s],
                                            state.rho_out),
-                              slots_a[s], token)
+                              slots_a[s] if s < len(slots_a) else [],
+                              token)
             mk = (masks[0, S_w + s] if (robust and masks is not None)
                   else 1.0)
             old = jax.tree.map(lambda l: l[:, s], state.rho_buf)
@@ -216,10 +226,10 @@ def make_sharded_round(
                 lambda rc, r, o: rc + (gate * (r - o)).astype(rc.dtype),
                 recv, rr, old)
             buf_new.append(jax.tree.map(
-                lambda r, o: gate * r + (1 - gate) * o, rr, old))
+                lambda r, o: mailbox_merge(r, o, gate), rr, old))
 
         z_half = jax.tree.map(
-            lambda zz, rc, gn, go: zz + rc + gn - go,
+            lambda zz, rc, gn, go: tracking_step(zz, rc, gn, go),
             state.z, recv, g_new, state.g_prev)
         z_new = jax.tree.map(lambda zh: (a_diag[idx] * zh).astype(zh.dtype),
                              z_half)
@@ -257,9 +267,8 @@ def make_sharded_round(
         else:
             fn = lambda s, b, k: block_step(s, b, k, None)
         out_specs = (specs, P(na))
-        new_state, losses = jax.shard_map(
-            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            axis_names=set(na), check_vma=False)(*args)
+        new_state, losses = _shard_map(
+            fn, mesh, in_specs, out_specs, na)(*args)
         return new_state, {"loss": losses.mean(), "losses": losses}
 
     return round_fn

@@ -4,7 +4,10 @@ Executes the *exact* R-FAST recursion under an arbitrary realized
 asynchronous schedule (activations + per-edge payload stamps produced by
 ``schedule.py``), entirely in JAX with a ``lax.scan`` over global
 iterations.  The simulator is the faithful-reproduction engine: every
-update is S.1–S.5 of Algorithm 2 verbatim.
+update is S.1–S.5 of Algorithm 2 verbatim — the formulas themselves live
+in :mod:`repro.core.protocol`; this engine owns only the *delayed-read*
+realization (history buffers indexed by payload stamps) over the dense
+edge arrays of a :class:`repro.core.plan.CommPlan`.
 
 State representation (flat parameter vectors, ``p`` = dimension):
 
@@ -22,7 +25,6 @@ delay/loss schedules::
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import Callable, NamedTuple
 
@@ -30,6 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .plan import CommPlan, as_comm_plan
+from .protocol import consensus_mix, descent_step, mailbox_merge, tracking_step
 from .schedule import Schedule
 from .topology import Topology
 
@@ -51,44 +55,30 @@ class RFASTState(NamedTuple):
     rho_hist: jnp.ndarray # (H, E_A, p)
 
 
-@dataclasses.dataclass(frozen=True)
-class _EdgeData:
-    """Static edge/weight arrays extracted from a Topology."""
-
-    src_w: np.ndarray; dst_w: np.ndarray; w_edge: np.ndarray
-    src_a: np.ndarray; dst_a: np.ndarray; a_edge: np.ndarray
-    diag_w: np.ndarray; diag_a: np.ndarray
-
-    @staticmethod
-    def build(topo: Topology) -> "_EdgeData":
-        ew = topo.edges_W() or [(0, 0)]
-        ea = topo.edges_A() or [(0, 0)]
-        return _EdgeData(
-            src_w=np.array([j for j, _ in ew], np.int32),
-            dst_w=np.array([i for _, i in ew], np.int32),
-            w_edge=np.array([topo.W[i, j] for j, i in ew], np.float32),
-            src_a=np.array([j for j, _ in ea], np.int32),
-            dst_a=np.array([i for _, i in ea], np.int32),
-            a_edge=np.array([topo.A[i, j] for j, i in ea], np.float32),
-            diag_w=np.diag(topo.W).astype(np.float32),
-            diag_a=np.diag(topo.A).astype(np.float32),
-        )
+def _sim_edges(plan: CommPlan):
+    """Unpadded leading slices of the dense edge arrays (the schedule's
+    per-edge stamp arrays are sized (K, max(1, E)) — match them)."""
+    ew = max(1, plan.n_edges_w)
+    ea = max(1, plan.n_edges_a)
+    return (plan.src_w[:ew], plan.dst_w[:ew], plan.w_edge[:ew],
+            plan.src_a[:ea], plan.dst_a[:ea], plan.a_edge[:ea])
 
 
 def init_state(
-    topo: Topology,
+    topo: Topology | CommPlan,
     x0: jnp.ndarray,
     grad_fn: GradFn,
     key: jax.Array,
     H: int,
 ) -> RFASTState:
     """Paper init: z_i^0 = ∇f_i(x_i^0; ζ_i^0); v = ρ = ρ̃ = 0."""
-    n = topo.n
+    plan = as_comm_plan(topo)
+    n = plan.n
     x0 = jnp.asarray(x0, jnp.float32)
     if x0.ndim == 1:
         x0 = jnp.tile(x0[None, :], (n, 1))
     p = x0.shape[1]
-    e_a = max(1, len(topo.edges_A()))
+    e_a = max(1, plan.n_edges_a)
     keys = jax.random.split(key, n)
     g0 = jax.vmap(grad_fn)(jnp.arange(n), x0, keys)
     zeros_np = jnp.zeros((n, p), jnp.float32)
@@ -109,7 +99,7 @@ def _step(
     state: RFASTState,
     inputs,
     *,
-    edges: _EdgeData,
+    plan: CommPlan,
     grad_fn: GradFn,
     gamma: float,
     H: int,
@@ -118,26 +108,27 @@ def _step(
     a = agent
     k = state.k
 
-    diag_w = jnp.asarray(edges.diag_w)
-    diag_a = jnp.asarray(edges.diag_a)
-    src_w = jnp.asarray(edges.src_w); dst_w = jnp.asarray(edges.dst_w)
-    src_a = jnp.asarray(edges.src_a); dst_a = jnp.asarray(edges.dst_a)
-    w_edge = jnp.asarray(edges.w_edge); a_edge = jnp.asarray(edges.a_edge)
+    sw, dw, we, sa, da, ae = _sim_edges(plan)
+    diag_w = jnp.asarray(plan.w_diag)
+    diag_a = jnp.asarray(plan.a_diag)
+    src_w = jnp.asarray(sw); dst_w = jnp.asarray(dw)
+    src_a = jnp.asarray(sa); dst_a = jnp.asarray(da)
+    w_edge = jnp.asarray(we); a_edge = jnp.asarray(ae)
 
     # (S.1) local descent ------------------------------------------------
-    v_new = state.x[a] - gamma * state.z[a]
+    v_new = descent_step(state.x[a], state.z[a], gamma)
 
     # (S.2a) consensus pull over G(W) with stale payloads ------------------
     vals_v = state.v_hist[stamp_v % H, src_w, :]          # (E_W, p)
     mask_w = (dst_w == a).astype(vals_v.dtype)[:, None]
-    x_a = diag_w[a] * v_new + jnp.sum(mask_w * w_edge[:, None] * vals_v, axis=0)
+    x_a = consensus_mix(diag_w[a], v_new, mask_w * w_edge[:, None], vals_v)
 
     # (S.2b) robust gradient tracking -------------------------------------
     g_new = grad_fn(a, x_a, key)
     vals_rho = state.rho_hist[stamp_rho % H, jnp.arange(src_a.shape[0]), :]
     mask_a_in = (dst_a == a).astype(vals_rho.dtype)[:, None]
     recv = jnp.sum(mask_a_in * (vals_rho - state.rho_buf), axis=0)
-    z_half = state.z[a] + recv + g_new - state.g_prev[a]
+    z_half = tracking_step(state.z[a], recv, g_new, state.g_prev[a])
 
     # (S.2c) keep own share; push mass onto out-edges ----------------------
     z_a = diag_a[a] * z_half
@@ -145,7 +136,7 @@ def _step(
     rho = state.rho + mask_a_out * a_edge[:, None] * z_half[None, :]
 
     # (S.4) buffers take the consumed values -------------------------------
-    rho_buf = jnp.where(mask_a_in > 0, vals_rho, state.rho_buf)
+    rho_buf = mailbox_merge(vals_rho, state.rho_buf, mask_a_in)
 
     # commit --------------------------------------------------------------
     x = state.x.at[a].set(x_a)
@@ -159,14 +150,14 @@ def _step(
 
 
 def rfast_scan(
-    topo: Topology,
+    topo: Topology | CommPlan,
     grad_fn: GradFn,
     gamma: float,
     H: int,
 ):
     """Returns a jitted ``(state, agent, stamp_v, stamp_rho, keys) -> state``."""
-    edges = _EdgeData.build(topo)
-    step = partial(_step, edges=edges, grad_fn=grad_fn, gamma=gamma, H=H)
+    plan = as_comm_plan(topo)
+    step = partial(_step, plan=plan, grad_fn=grad_fn, gamma=gamma, H=H)
 
     @jax.jit
     def run_chunk(state: RFASTState, agent, stamp_v, stamp_rho, keys):
@@ -193,11 +184,12 @@ def run_rfast(
     eval_fn: Callable[[RFASTState, float], dict] | None = None,
 ) -> tuple[RFASTState, list[dict]]:
     """Run the full schedule; optionally evaluate every ``eval_every`` events."""
+    plan = as_comm_plan(topo)
     H = int(schedule.D) + 2
     key = jax.random.PRNGKey(seed)
     key, init_key = jax.random.split(key)
-    state = init_state(topo, x0, grad_fn, init_key, H)
-    chunk = rfast_scan(topo, grad_fn, gamma, H)
+    state = init_state(plan, x0, grad_fn, init_key, H)
+    chunk = rfast_scan(plan, grad_fn, gamma, H)
 
     K = schedule.K
     step_keys = jax.random.split(key, K)

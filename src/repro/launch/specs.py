@@ -18,9 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.runtime import (edge_arrays, init_node_state,
-                                make_rfast_round)
-from repro.core.runtime_sharded import init_sharded_state, make_sharded_round
+from repro.core.plan import build_comm_plan
+from repro.core.runtime import init_node_state, make_rfast_round
+from repro.core.runtime_sharded import (init_sharded_state,
+                                        make_sharded_round,
+                                        partial_auto_shard_map_supported)
 from repro.core.topology import binary_tree
 from repro.models import sharding as msh
 from repro.models.config import ModelConfig
@@ -97,10 +99,14 @@ def _frontend_struct(cfg, n_lead, b, dtype):
 # ------------------------------------------------------------------ #
 def build_train(cfg: ModelConfig, mesh, *, seq: int, global_batch: int,
                 rules=None, node_axes=None, gamma=1e-2, topo=None,
-                dtype=jnp.bfloat16, unroll=False, comm: str = "ppermute",
+                dtype=jnp.bfloat16, unroll=False, comm: str = "auto",
                 ce: str = "lse", seq_parallel: bool | None = None):
     """comm="ppermute": shard_map spanning-tree gossip (production).
     comm="dense": GSPMD dense-mixing baseline (paper-naive port).
+    comm="auto": ppermute when shard_map supports partial-auto mode
+    (model axis GSPMD inside the manual node region), dense otherwise
+    (jax 0.4.x — fully-manual regions reject the model's sharding
+    constraints; DESIGN.md §2).
     ce: cross-entropy mode (see models.transformer.loss_fn)."""
     rules = rules or sh.RULES_BASE
     if seq_parallel is None:
@@ -111,7 +117,10 @@ def build_train(cfg: ModelConfig, mesh, *, seq: int, global_batch: int,
     b_node = global_batch // n_nodes
     assert b_node >= 1, (global_batch, n_nodes)
     topo = topo or binary_tree(n_nodes)
-    spec = edge_arrays(topo)
+    spec = build_comm_plan(topo)
+    if comm == "auto":
+        comm = ("ppermute" if partial_auto_shard_map_supported()
+                else "dense")
 
     s_text = seq - (cfg.frontend_seq if (cfg.frontend and not cfg.enc_dec)
                     else 0)

@@ -6,6 +6,11 @@ the tracked direction, over a selectable topology, with checkpointing and
 
     PYTHONPATH=src python -m repro.launch.train \
         --arch rfast-100m --reduced --nodes 4 --steps 200 --topology binary_tree
+
+``--impl pallas`` commits the protocol state through the fused
+``kernels/rfast_update`` Pallas kernel (interpret mode off-TPU); the
+default ``--impl jnp`` is the GSPMD dense-mixing path.  Both are the same
+protocol (core/protocol.py) over the same CommPlan.
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ import numpy as np
 from repro.checkpoint import load_checkpoint, latest_step, save_checkpoint
 from repro.metrics import MetricsLogger, StepTimer
 from repro.configs import ARCHS, get_config
+from repro.core.protocol import IMPLS
 from repro.core.runtime import edge_arrays, init_node_state, make_rfast_round
 from repro.core.topology import get_topology
 from repro.data.pipeline import LMShardConfig, node_batch
@@ -39,6 +45,9 @@ def main() -> None:
     ap.add_argument("--gamma", type=float, default=3e-3)
     ap.add_argument("--momentum", type=float, default=0.0)
     ap.add_argument("--loss-prob", type=float, default=0.0)
+    ap.add_argument("--impl", default="jnp", choices=IMPLS,
+                    help="protocol backend: jnp (dense GSPMD mixing) or "
+                         "pallas (fused update kernel)")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--metrics", default="", help="JSONL metrics path")
     ap.add_argument("--ckpt-every", type=int, default=100)
@@ -73,13 +82,13 @@ def main() -> None:
     robust = args.loss_prob > 0
     round_fn = jax.jit(make_rfast_round(
         spec, grad_fn, gamma=gamma, robust=robust,
-        momentum=args.momentum))
+        momentum=args.momentum, impl=args.impl))
 
     key = jax.random.PRNGKey(args.seed)
     params = init_params(cfg, key)
     n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M nodes={n} "
-          f"topo={topo.name} robust={robust}")
+          f"topo={topo.name} robust={robust} impl={args.impl}")
 
     state = init_node_state(spec, params, grad_fn, batches_at(0), key,
                             robust=robust, momentum=args.momentum)

@@ -1,0 +1,85 @@
+"""Shared test configuration.
+
+Installs a minimal ``hypothesis`` fallback into ``sys.modules`` when the
+real package is absent, so ``tests/test_kernels.py`` and
+``tests/test_properties.py`` collect and run everywhere (CI images without
+dev deps used to error the whole pytest run at collection time).
+
+The fallback implements just the surface this repo uses — ``given`` /
+``settings`` / ``strategies.{integers,floats,sampled_from,booleans}`` —
+by drawing ``max_examples`` deterministic pseudo-random examples per test.
+No shrinking, no example database: install the real package
+(``pip install -r requirements-dev.txt``) for full property testing.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+
+def _install_hypothesis_fallback() -> None:
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def integers(min_value=None, max_value=None):
+        lo = 0 if min_value is None else int(min_value)
+        hi = (1 << 16) if max_value is None else int(max_value)
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        lo, hi = float(min_value), float(max_value)
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.randrange(2)))
+
+    def given(*gargs, **gkwargs):
+        def deco(fn):
+            # NOTE: the wrapper must expose a ZERO-ARG signature (no
+            # functools.wraps/__wrapped__), otherwise pytest would try to
+            # resolve the strategy parameters as fixtures.
+            def wrapper():
+                n = int(getattr(wrapper, "_hypo_max_examples", 20))
+                rng = random.Random(0)
+                for _ in range(n):
+                    a = [s.draw(rng) for s in gargs]
+                    kw = {k: s.draw(rng) for k, s in gkwargs.items()}
+                    fn(*a, **kw)
+            wrapper.__name__ = getattr(fn, "__name__", "wrapped")
+            wrapper.__doc__ = getattr(fn, "__doc__", None)
+            wrapper.is_hypothesis_fallback = True
+            return wrapper
+        return deco
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._hypo_max_examples = max_examples
+            return fn
+        return deco
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.sampled_from = sampled_from
+    st.booleans = booleans
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.__version__ = "0.0-fallback"
+
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_fallback()

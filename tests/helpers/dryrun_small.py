@@ -35,6 +35,8 @@ def main():
             compiled = jax.jit(fn).lower(*args).compile()
             ma = compiled.memory_analysis()
             ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):   # jax 0.4.x: one dict/device
+                ca = ca[0]
             assert ma.argument_size_in_bytes > 0
             assert ca.get("flops", 0) > 0
             print(f"OK {arch} {shape} args="

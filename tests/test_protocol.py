@@ -1,0 +1,304 @@
+"""The protocol substrate: CommPlan consistency, backend equivalence
+(impl="jnp" vs impl="pallas" vs the pre-refactor runtime round), and the
+Lemma-3 invariant through a CommPlan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (TOPOLOGIES, ProtocolState, get_topology,
+                        protocol_tracked_mass)
+from repro.core.plan import build_comm_plan, matchings
+from repro.core.runtime import (edge_arrays, init_node_state,
+                                make_rfast_round)
+
+TOPOS = [("binary_tree", 5), ("directed_ring", 6), ("exponential", 7),
+         ("mesh2d", 6), ("line", 4), ("parameter_server", 7)]
+
+
+def quad_problem(n, p, seed=0):
+    rng = np.random.default_rng(seed)
+    C = jnp.asarray(rng.normal(0, 1, (n, p)), jnp.float32)
+    S = jnp.asarray(rng.uniform(0.5, 2.0, (n, 1)), jnp.float32)
+
+    def grad_fn(params, batch, key):
+        c, s = batch
+        g = {"w": s * (params["w"] - c)}
+        return 0.5 * jnp.sum(s * (params["w"] - c) ** 2), g
+
+    return grad_fn, (C, S)
+
+
+# ------------------------------------------------------------------ #
+# pre-refactor oracle: the historic runtime.py round, verbatim
+# ------------------------------------------------------------------ #
+def make_prerefactor_round(spec, grad_fn, *, gamma, robust=False,
+                           momentum=0.0):
+    """Copy of make_rfast_round as it existed before the protocol.py
+    unification (dense scatter/gather, no backend switch) — the fixture
+    the unified implementations must reproduce."""
+    n = spec.n
+    w_diag = jnp.asarray(spec.w_diag)
+    a_diag = jnp.asarray(spec.a_diag)
+    src_w = jnp.asarray(spec.src_w); dst_w = jnp.asarray(spec.dst_w)
+    src_a = jnp.asarray(spec.src_a); dst_a = jnp.asarray(spec.dst_a)
+    w_edge = jnp.asarray(spec.w_edge); a_edge = jnp.asarray(spec.a_edge)
+
+    def vgrads(x, batches, keys):
+        return jax.vmap(grad_fn)(x, batches, keys)
+
+    def round_fn(state, batches, keys, masks=None):
+        lr = gamma(state.step) if callable(gamma) else gamma
+        if momentum:
+            m = jax.tree.map(lambda mm, zz: momentum * mm + zz,
+                             state.m, state.z)
+            v = jax.tree.map(lambda xx, mm: xx - lr * mm, state.x, m)
+        else:
+            m = None
+            v = jax.tree.map(lambda xx, zz: xx - lr * zz, state.x, state.z)
+
+        if masks is None and not robust:
+            def mix_x(vl):
+                out = w_diag.reshape((n,) + (1,) * (vl.ndim - 1)) * vl
+                contrib = w_edge.reshape((-1,) + (1,) * (vl.ndim - 1)) \
+                    * vl[src_w]
+                return out.at[dst_w].add(contrib.astype(out.dtype))
+            x_new = jax.tree.map(mix_x, v)
+            mail_v = state.mail_v
+        else:
+            mk = jnp.ones((spec.e_pad,), jnp.float32) if masks is None \
+                else masks
+            def mix_robust(vl, ml):
+                mshape = (-1,) + (1,) * (vl.ndim - 1)
+                mkr = mk.reshape(mshape)
+                recv = mkr * vl[src_w] + (1 - mkr) * ml
+                out = w_diag.reshape((n,) + (1,) * (vl.ndim - 1)) * vl
+                contrib = w_edge.reshape(mshape) * recv
+                return out.at[dst_w].add(contrib.astype(out.dtype)), recv
+            pairs = jax.tree.map(mix_robust, v, state.mail_v)
+            x_new = jax.tree.map(lambda p: p[0], pairs,
+                                 is_leaf=lambda q: isinstance(q, tuple))
+            mail_v = jax.tree.map(lambda p: p[1], pairs,
+                                  is_leaf=lambda q: isinstance(q, tuple))
+
+        losses, g_new = vgrads(x_new, batches, keys)
+        mk = jnp.ones((spec.e_pad,), jnp.float32) if masks is None else masks
+
+        def track(zl, gl_new, gl_old, rho_l, buf_l):
+            mshape = (-1,) + (1,) * (zl.ndim - 1)
+            mkr = mk.reshape(mshape)
+            diff = (mkr * (rho_l - buf_l)).astype(zl.dtype)
+            recv = jnp.zeros_like(zl).at[dst_a].add(diff)
+            z_half = zl + recv + gl_new - gl_old
+            z_new = a_diag.reshape((n,) + (1,) * (zl.ndim - 1)) * z_half
+            push = a_edge.reshape(mshape) * z_half[src_a]
+            rho_new = rho_l + push.astype(rho_l.dtype)
+            buf_new = mkr * rho_l + (1 - mkr) * buf_l
+            return z_new, rho_new, buf_new
+
+        trip = jax.tree.map(track, state.z, g_new, state.g_prev,
+                            state.rho, state.rho_buf)
+        is3 = lambda q: isinstance(q, tuple)
+        z_new = jax.tree.map(lambda t: t[0], trip, is_leaf=is3)
+        rho_new = jax.tree.map(lambda t: t[1], trip, is_leaf=is3)
+        buf_new = jax.tree.map(lambda t: t[2], trip, is_leaf=is3)
+
+        return ProtocolState(
+            step=state.step + 1, x=x_new, z=z_new, g_prev=g_new,
+            rho=rho_new, rho_buf=buf_new, mail_v=mail_v, m=m), losses
+
+    return round_fn
+
+
+def _run_impl(round_fn, state, batches, n, e_pad, rounds, loss_prob, seed,
+              is_oracle=False):
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    for t in range(rounds):
+        masks = None
+        if loss_prob > 0:
+            masks = jnp.asarray(rng.uniform(size=e_pad) >= loss_prob,
+                                jnp.float32)
+        keys = jax.random.split(jax.random.fold_in(key, t), n)
+        out = round_fn(state, batches, keys, masks)
+        state = out[0]
+    return state
+
+
+# ------------------------------------------------------------------ #
+# backend equivalence on random topologies with random loss masks
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("name,n", TOPOS)
+@pytest.mark.parametrize("loss_prob", [0.0, 0.4])
+def test_backends_match_prerefactor_round(name, n, loss_prob):
+    topo = get_topology(name, n)
+    spec = edge_arrays(topo)
+    p = 9
+    grad_fn, batches = quad_problem(n, p, seed=n)
+    params = {"w": jnp.zeros((p,), jnp.float32)}
+    robust = loss_prob > 0
+    key = jax.random.PRNGKey(0)
+    st0 = init_node_state(spec, params, grad_fn, batches, key, robust=robust)
+
+    oracle = jax.jit(make_prerefactor_round(spec, grad_fn, gamma=0.05,
+                                            robust=robust))
+    r_jnp = jax.jit(make_rfast_round(spec, grad_fn, gamma=0.05,
+                                     robust=robust, impl="jnp"))
+    r_pal = jax.jit(make_rfast_round(spec, grad_fn, gamma=0.05,
+                                     robust=robust, impl="pallas"))
+
+    args = (st0, batches, n, spec.e_pad, 12, loss_prob, 7)
+    s_or = _run_impl(oracle, *args)
+    s_j = _run_impl(r_jnp, *args)
+    s_p = _run_impl(r_pal, *args)
+
+    for f in ("x", "z", "rho", "rho_buf"):
+        a = np.asarray(getattr(s_or, f)["w"])
+        # impl="jnp" IS the pre-refactor math: bit-equal
+        np.testing.assert_array_equal(a, np.asarray(getattr(s_j, f)["w"]),
+                                      err_msg=f"jnp {name} {f}")
+        # the fused kernel path agrees to fp32 tolerance
+        np.testing.assert_allclose(a, np.asarray(getattr(s_p, f)["w"]),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"pallas {name} {f}")
+
+
+def test_backends_match_with_momentum():
+    topo = get_topology("binary_tree", 6)
+    spec = edge_arrays(topo)
+    p = 5
+    grad_fn, batches = quad_problem(6, p, seed=2)
+    params = {"w": jnp.zeros((p,), jnp.float32)}
+    key = jax.random.PRNGKey(1)
+    st0 = init_node_state(spec, params, grad_fn, batches, key,
+                          robust=True, momentum=0.7)
+    mk_args = dict(gamma=0.03, robust=True, momentum=0.7)
+    oracle = jax.jit(make_prerefactor_round(spec, grad_fn, **mk_args))
+    r_jnp = jax.jit(make_rfast_round(spec, grad_fn, impl="jnp", **mk_args))
+    r_pal = jax.jit(make_rfast_round(spec, grad_fn, impl="pallas",
+                                     **mk_args))
+    args = (st0, batches, 6, spec.e_pad, 10, 0.3, 3)
+    s_or, s_j, s_p = (_run_impl(r, *args) for r in (oracle, r_jnp, r_pal))
+    for f in ("x", "z", "m"):
+        a = np.asarray(getattr(s_or, f)["w"])
+        np.testing.assert_array_equal(a, np.asarray(getattr(s_j, f)["w"]))
+        np.testing.assert_allclose(a, np.asarray(getattr(s_p, f)["w"]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_schedule_gamma_and_losses_metrics():
+    """Both backends accept a schedule for gamma and report same losses."""
+    topo = get_topology("directed_ring", 4)
+    spec = edge_arrays(topo)
+    grad_fn, batches = quad_problem(4, 3, seed=5)
+    params = {"w": jnp.zeros((3,), jnp.float32)}
+    st = init_node_state(spec, params, grad_fn, batches,
+                         jax.random.PRNGKey(0))
+    sched = lambda step: 0.1 / (1.0 + 0.1 * step)
+    keys = jax.random.split(jax.random.PRNGKey(2), 4)
+    outs = {}
+    for im in ("jnp", "pallas"):
+        rf = jax.jit(make_rfast_round(spec, grad_fn, gamma=sched, impl=im))
+        _, metrics = rf(st, batches, keys, None)
+        assert metrics["losses"].shape == (4,)
+        outs[im] = float(metrics["loss"])
+    assert outs["jnp"] == pytest.approx(outs["pallas"], rel=1e-6)
+
+
+# ------------------------------------------------------------------ #
+# Lemma 3 through CommPlan (both backends, random masks)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_tracked_mass_invariant_through_commplan(impl):
+    topo = get_topology("binary_tree", 7)
+    plan = build_comm_plan(topo)
+    grad_fn, batches = quad_problem(7, 4, seed=3)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    key = jax.random.PRNGKey(4)
+    state = init_node_state(plan, params, grad_fn, batches, key, robust=True)
+    rf = jax.jit(make_rfast_round(plan, grad_fn, gamma=0.02, robust=True,
+                                  impl=impl))
+    rng = np.random.default_rng(6)
+    for _ in range(30):
+        masks = jnp.asarray(rng.uniform(size=plan.e_pad) > 0.4, jnp.float32)
+        state, _ = rf(state, batches, jax.random.split(key, 7), masks)
+        mass = np.asarray(protocol_tracked_mass(state)["w"])
+        gsum = np.asarray(state.g_prev["w"].sum(0))
+        np.testing.assert_allclose(mass, gsum, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# CommPlan representation consistency
+# ------------------------------------------------------------------ #
+def _dense_from_edge_arrays(plan, n):
+    W = np.zeros((n, n)); A = np.zeros((n, n))
+    W[np.arange(n), np.arange(n)] = plan.w_diag
+    A[np.arange(n), np.arange(n)] = plan.a_diag
+    for e in range(plan.n_edges_w):
+        W[plan.dst_w[e], plan.src_w[e]] = plan.w_edge[e]
+    for e in range(plan.n_edges_a):
+        A[plan.dst_a[e], plan.src_a[e]] = plan.a_edge[e]
+    return W, A
+
+
+def _dense_from_node_tables(plan, n):
+    W = np.zeros((n, n)); A = np.zeros((n, n))
+    W[np.arange(n), np.arange(n)] = plan.w_diag
+    A[np.arange(n), np.arange(n)] = plan.a_diag
+    for i in range(n):
+        for k in range(plan.kw):
+            if plan.in_w_wt[i, k] > 0:
+                W[i, plan.in_w_src[i, k]] = plan.in_w_wt[i, k]
+        for k in range(plan.ko):
+            if plan.out_a_val[i, k] > 0:
+                e = plan.out_a_epos[i, k]
+                A[plan.dst_a[e], i] = plan.out_a_wt[i, k]
+    return W, A
+
+
+def _dense_from_slots(plan, n):
+    W = np.zeros((n, n)); A = np.zeros((n, n))
+    W[np.arange(n), np.arange(n)] = plan.w_diag
+    A[np.arange(n), np.arange(n)] = plan.a_diag
+    for s, es in enumerate(plan.slots_w):
+        for (j, i) in es:
+            W[i, j] = plan.w_in_table[s, i]
+    for s, es in enumerate(plan.slots_a):
+        for (j, i) in es:
+            A[i, j] = plan.a_out_table[s, j]
+    return W, A
+
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("n", [3, 6, 9])
+def test_commplan_representations_agree(name, n):
+    """Dense edge arrays, matching slot tables, and per-node neighbour
+    tables all reconstruct the same (W, A)."""
+    topo = get_topology(name, n)
+    plan = build_comm_plan(topo)
+    assert plan.e_pad % plan.n == 0
+    assert plan.e_pad >= max(plan.n_edges_w, plan.n_edges_a)
+    # padded tail entries carry zero weight
+    assert np.all(plan.w_edge[plan.n_edges_w:] == 0)
+    assert np.all(plan.a_edge[plan.n_edges_a:] == 0)
+    for rebuild in (_dense_from_edge_arrays, _dense_from_node_tables,
+                    _dense_from_slots):
+        W, A = rebuild(plan, n)
+        np.testing.assert_allclose(W, topo.W, atol=1e-6, err_msg=name)
+        np.testing.assert_allclose(A, topo.A, atol=1e-6, err_msg=name)
+    # each A-edge owned by exactly one (node, out-slot) and one in-slot
+    owned = sorted(plan.out_a_epos[plan.out_a_val > 0].tolist())
+    assert owned == list(range(plan.n_edges_a))
+    received = sorted(plan.in_a_epos[plan.in_a_val > 0].tolist())
+    assert received == list(range(plan.n_edges_a))
+
+
+def test_matchings_unique_src_dst():
+    for name, n in TOPOS:
+        topo = get_topology(name, n)
+        for edges in (topo.edges_W(), topo.edges_A()):
+            slots = matchings(edges)
+            assert sorted(e for s in slots for e in s) == sorted(edges)
+            for s in slots:
+                assert len({j for j, _ in s}) == len(s)
+                assert len({i for _, i in s}) == len(s)
