@@ -2,26 +2,18 @@
 relative cost of ref vs fused; true perf numbers require TPU)."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.rfast_update.ops import rfast_update
+from repro.kernels.rfast_update.ops import rfast_commit, rfast_update
 from repro.kernels.ssm_scan.ops import selective_scan
-from .common import csv_row
+from .common import csv_row, measure_us
 
 
-def _time(fn, *args, reps=3, **kw):
-    out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    t0 = time.time()
-    for _ in range(reps):
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
-    return (time.time() - t0) / reps * 1e6
+def _time(fn, *args, **kw):
+    return measure_us(fn, *args, warmup=2, reps=9, **kw)
 
 
 def _protocol_round_rows(impl: str | None) -> list[str]:
@@ -89,6 +81,20 @@ def run(impl: str | None = None) -> list[str]:
         rfast_update(**kw, impl="ref"), rfast_update(**kw, impl="pallas")))
     rows.append(csv_row("kernel/rfast_update_ref_1M", us_ref,
                         f"pallas_interp_maxerr={err:.1e}"))
+
+    # commit-only variant: drops the x'/v output streams (and the
+    # x/v_in inputs feeding them) that the runtime discards — the
+    # ref-impl timing delta shows the saved memory traffic on CPU too
+    ck = dict(z=kw["z"], g_new=kw["g_new"], g_old=kw["g_old"],
+              rho_in=kw["rho_in"], rho_buf=kw["rho_buf"], mask=kw["mask"],
+              rho_out=kw["rho_out"], a_out=kw["a_out"], a_self=0.5)
+    us_commit = _time(rfast_commit, **ck, impl="ref")
+    cerr = max(float(jnp.abs(r - p).max()) for r, p in zip(
+        rfast_commit(**ck, impl="ref"), rfast_commit(**ck, impl="pallas")))
+    rows.append(csv_row(
+        "kernel/rfast_commit_ref_1M", us_commit,
+        f"pallas_interp_maxerr={cerr:.1e};"
+        f"saving_vs_full={us_ref / us_commit:.2f}x"))
 
     q = a(1, 512, 4, 64)
     k = a(1, 512, 2, 64)

@@ -2,13 +2,12 @@
 tracking vs OSGP's push-sum (which loses gradient mass)."""
 from __future__ import annotations
 
-import time
-
 import jax.numpy as jnp
 
 from repro.core import get_topology
 from repro.core.baselines import run_osgp
-from .common import csv_row, eval_fn_for, logistic_setup, run_rfast_logistic
+from .common import (csv_row, eval_fn_for, logistic_setup,
+                     run_rfast_logistic, stopwatch)
 
 
 def run(n: int = 7, K: int = 14_000, gamma: float = 5e-3) -> list[str]:
@@ -23,11 +22,11 @@ def run(n: int = 7, K: int = 14_000, gamma: float = 5e-3) -> list[str]:
             f"loss={metrics[-1]['loss']:.4f};acc={metrics[-1]['acc']:.3f}"))
 
         topo = get_topology("directed_ring", n)
-        t0 = time.time()
-        _, ms = run_osgp(topo, prob.grad_fn(), jnp.zeros((n, prob.p)),
-                         gamma, K, loss_prob=loss_p, eval_fn=eval_fn,
-                         eval_every=2000)
-        wall = time.time() - t0
+        with stopwatch() as sw:
+            _, ms = run_osgp(topo, prob.grad_fn(), jnp.zeros((n, prob.p)),
+                             gamma, K, loss_prob=loss_p, eval_fn=eval_fn,
+                             eval_every=2000)
+        wall = sw["s"]
         rows.append(csv_row(
             f"packet_loss/p{loss_p}/OSGP", wall / K * 1e6,
             f"loss={ms[-1]['loss']:.4f};acc={ms[-1]['acc']:.3f}"))

@@ -5,8 +5,6 @@ over synchronous methods (which pay the straggler at every barrier).
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +14,7 @@ from repro.core.baselines import (run_adpsgd, run_dpsgd, run_osgp,
                                   run_ring_allreduce, run_sab,
                                   sync_round_times)
 from .common import (csv_row, eval_fn_for, logistic_setup,
-                     run_rfast_logistic, time_to_loss)
+                     run_rfast_logistic, stopwatch, time_to_loss)
 
 
 def _grad_mean_adapter(prob):
@@ -54,10 +52,10 @@ def run(target: float = 0.35, n: int = 8, rounds: int = 1200,
         times = sync_round_times(compute, rounds)
 
         def bench_sync(name, fn, *args, **kw):
-            t0 = time.time()
-            _, ms = fn(*args, times=times, eval_fn=eval_fn,
-                       eval_every=25, **kw)
-            wall = time.time() - t0
+            with stopwatch() as sw:
+                _, ms = fn(*args, times=times, eval_fn=eval_fn,
+                           eval_every=25, **kw)
+            wall = sw["s"]
             t = time_to_loss(ms, target)
             rows.append(csv_row(
                 f"straggler/{tag}/{name}", wall / rounds * 1e6,
@@ -71,10 +69,10 @@ def run(target: float = 0.35, n: int = 8, rounds: int = 1200,
         bench_sync("S-AB", run_sab, topo_d, gfn, x0, gamma, rounds)
 
         def bench_async(name, fn, topo, **kw):
-            t0 = time.time()
-            _, ms = fn(topo, gfn, x0, gamma, K, compute_time=compute,
-                       eval_fn=eval_fn, eval_every=200, **kw)
-            wall = time.time() - t0
+            with stopwatch() as sw:
+                _, ms = fn(topo, gfn, x0, gamma, K, compute_time=compute,
+                           eval_fn=eval_fn, eval_every=200, **kw)
+            wall = sw["s"]
             t = time_to_loss(ms, target)
             rows.append(csv_row(
                 f"straggler/{tag}/{name}", wall / K * 1e6,

@@ -1,14 +1,51 @@
 """Shared benchmark harness: paper §VI logistic-regression setup at
-CPU-friendly scale, with virtual-time accounting for speed comparisons."""
+CPU-friendly scale, virtual-time accounting for speed comparisons, and
+the suite-wide timing utilities (``perf_counter`` based, warmup separated
+from measurement, median-of-k reporting)."""
 from __future__ import annotations
 
 import time
+from contextlib import contextmanager
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import generate_schedule, get_topology, run_rfast
 from repro.data import make_logistic_problem
+
+
+# --------------------------------------------------------------------- #
+# timing
+# --------------------------------------------------------------------- #
+def measure_us(fn, *args, warmup: int = 1, reps: int = 5, **kw) -> float:
+    """Median wall time per call in µs.
+
+    ``warmup`` calls run first (compile + caches) and are NOT measured;
+    each of the ``reps`` measured calls is blocked on, and the median is
+    reported so a stray scheduler hiccup cannot skew the row.
+    """
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+@contextmanager
+def stopwatch():
+    """``with stopwatch() as sw: ...`` — ``sw['s']`` holds elapsed seconds
+    (``perf_counter``; for one-shot sections where median-of-k is not
+    affordable, e.g. whole training runs)."""
+    box: dict = {}
+    t0 = time.perf_counter()
+    try:
+        yield box
+    finally:
+        box["s"] = time.perf_counter() - t0
 
 
 def logistic_setup(n: int, *, het: bool = True, d: int = 64, m: int = 2800,
@@ -41,18 +78,19 @@ def eval_fn_for(prob):
 
 def run_rfast_logistic(prob, topo_name: str, K: int, *, gamma=5e-3,
                        compute_time=None, loss_prob=0.0, seed=0,
-                       eval_every=500):
+                       eval_every=500, mode="wavefront"):
     n = prob.n
     topo = get_topology(topo_name, n)
     sched = generate_schedule(topo, K, compute_time=compute_time,
                               loss_prob=loss_prob, latency=0.3, seed=seed)
     x0 = jnp.zeros((n, prob.p), jnp.float32)
-    t0 = time.time()
-    state, metrics = run_rfast(topo, sched, prob.grad_fn(), x0, gamma,
-                               eval_every=eval_every,
-                               eval_fn=eval_fn_for(prob), seed=seed)
-    wall = time.time() - t0
-    return state, metrics, wall
+    with stopwatch() as sw:
+        state, metrics = run_rfast(topo, sched, prob.grad_fn(), x0, gamma,
+                                   eval_every=eval_every,
+                                   eval_fn=eval_fn_for(prob), seed=seed,
+                                   mode=mode)
+        jax.block_until_ready(state.x)
+    return state, metrics, sw["s"]
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

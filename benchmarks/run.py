@@ -4,6 +4,9 @@ Prints ``name,us_per_call,derived`` CSV (plus a header comment per
 section).  ``--quick`` shrinks iteration counts for CI.  ``--json PATH``
 additionally writes the rows as structured JSON so perf trajectories can
 be committed (e.g. ``BENCH_2026-07-30.json``) and diffed across PRs.
+``--compare OLD.json`` diffs the fresh us_per_call numbers against such
+a committed baseline and exits non-zero on >25% regressions (tune with
+``--regression-threshold``) so CI can gate on perf.
 ``--impl`` selects the protocol backend timed by the kernels suite.
 """
 from __future__ import annotations
@@ -39,6 +42,13 @@ def main() -> None:
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write results as JSON (commit as "
                          "BENCH_*.json for perf trajectories)")
+    ap.add_argument("--compare", default="", metavar="OLD.json",
+                    help="diff us_per_call against a committed baseline "
+                         "JSON and exit non-zero on regressions beyond "
+                         "--regression-threshold")
+    ap.add_argument("--regression-threshold", type=float, default=0.25,
+                    help="fractional us_per_call increase treated as a "
+                         "regression in --compare mode (default 0.25)")
     args = ap.parse_args()
 
     from repro.core.protocol import IMPLS
@@ -85,8 +95,42 @@ def main() -> None:
             json.dump({"meta": meta, "rows": records}, f, indent=2)
             f.write("\n")
         print(f"# wrote {len(records)} rows to {args.json}", file=sys.stderr)
+    if args.compare:
+        regressions = _compare(records, args.compare,
+                               args.regression_threshold)
+        if regressions:
+            raise SystemExit(2)
     if failed:
         raise SystemExit(1)
+
+
+def _compare(records: list[dict], baseline_path: str,
+             threshold: float) -> list[dict]:
+    """Diff ``records`` against a committed BENCH_*.json; report and
+    return rows whose us_per_call regressed by more than ``threshold``."""
+    with open(baseline_path) as f:
+        old = {(r["suite"], r["name"]): r["us_per_call"]
+               for r in json.load(f)["rows"]}
+    regressions = []
+    print(f"# --- compare vs {baseline_path} "
+          f"(threshold +{threshold:.0%}) ---", file=sys.stderr)
+    for r in records:
+        base = old.get((r["suite"], r["name"]))
+        new = r["us_per_call"]
+        if not base or not new:
+            continue
+        ratio = new / base
+        flag = " REGRESSION" if ratio > 1 + threshold else ""
+        print(f"# {r['suite']}/{r['name']}: {base:.1f} -> {new:.1f} us "
+              f"({ratio - 1:+.0%} vs baseline){flag}", file=sys.stderr)
+        if flag:
+            regressions.append({**r, "baseline_us": base, "ratio": ratio})
+    if regressions:
+        print(f"# {len(regressions)} regression(s) beyond "
+              f"+{threshold:.0%}", file=sys.stderr)
+    else:
+        print("# no regressions", file=sys.stderr)
+    return regressions
 
 
 if __name__ == "__main__":

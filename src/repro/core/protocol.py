@@ -40,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .plan import CommPlan
-from ..kernels.rfast_update.ops import rfast_update
+from ..kernels.rfast_update.ops import rfast_commit
 
 __all__ = [
     "ProtocolState", "VGradFn", "make_protocol_round", "init_protocol_state",
@@ -123,7 +123,8 @@ def init_protocol_state(
         lambda l: jnp.zeros((e,) + l.shape[1:], l.dtype), x)
     return ProtocolState(
         step=jnp.zeros((), jnp.int32),
-        x=x, z=g0, g_prev=g0,
+        # g_prev gets its own buffer: donating rounds forbid aliased leaves
+        x=x, z=g0, g_prev=jax.tree.map(jnp.copy, g0),
         rho=zeros_e,
         rho_buf=jax.tree.map(jnp.copy, zeros_e),
         mail_v=jax.tree.map(jnp.copy, zeros_e) if robust else None,
@@ -151,6 +152,7 @@ def make_protocol_round(
     momentum: float = 0.0,
     impl: str = "jnp",
     interpret: bool | None = None,
+    donate: bool = False,
 ):
     """Build ``round_fn(state, batches, keys, masks) -> (state, metrics)``.
 
@@ -162,15 +164,25 @@ def make_protocol_round(
     fractional weights).  ``gamma`` may be a schedule ``step -> lr``.
     ``impl`` selects the backend; ``interpret`` (pallas only) defaults to
     True unless running on TPU.
+
+    ``donate=True`` returns the round jitted with the state argument
+    donated: x/z/ρ/ρ̃ update in place instead of double-buffering.  The
+    caller must rebind (``state = round_fn(state, ...)[0]``) and never
+    touch the old state again — training loops do; benchmarks and tests
+    that replay a state must use the default.
     """
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if impl == "jnp":
-        return _make_round_jnp(plan, vgrads, gamma, robust, momentum)
-    return _make_round_pallas(plan, vgrads, gamma, robust, momentum,
-                              interpret)
+        round_fn = _make_round_jnp(plan, vgrads, gamma, robust, momentum)
+    else:
+        round_fn = _make_round_pallas(plan, vgrads, gamma, robust, momentum,
+                                      interpret)
+    if donate:
+        round_fn = jax.jit(round_fn, donate_argnums=(0,))
+    return round_fn
 
 
 # --------------------------------------------------------------------- #
@@ -324,25 +336,25 @@ def _make_round_pallas(plan: CommPlan, vgrads: VGradFn, gamma, robust,
 
         losses, g_new = vgrads(x_new, batches, keys)
 
-        # ---- fused commit: S.1/S.2a recompute + S.2b/c + S.4 in ONE pass --
-        # The kernel's x'/v outputs are discarded here (x⁺ is committed
-        # from the jnp pull above, the exact point the gradient saw); a
-        # kernel variant that skips those two output writes would save
-        # ~2/5 of the commit's output bandwidth on TPU — future work.
+        # ---- fused commit: S.2b/c + S.4 in ONE pass -----------------------
+        # x⁺ is committed from the jnp pull above (the exact point the
+        # gradient saw), so the commit-only kernel variant is used: it
+        # skips the x'/v output writes (2 of the full kernel's 5 output
+        # streams) and the x/v_in input streams that feed only them.
         mask_in = mk[in_a_epos] * in_a_val          # (N, ka)
         x_leaves = jax.tree.leaves(state.x)
         z_leaves = jax.tree.leaves(state.z)
         gn_leaves = jax.tree.leaves(g_new)
         go_leaves = jax.tree.leaves(state.g_prev)
-        vin_leaves = jax.tree.leaves(v_in)
         rho_leaves = jax.tree.leaves(state.rho)
         buf_leaves = jax.tree.leaves(state.rho_buf)
 
         # group leaves by dtype so each group concatenates into one flat
         # (lead, P) vector -> a single kernel launch per group per round
+        # (x dtype is irrelevant: x does not feed the commit-only kernel)
         groups: dict[tuple, list[int]] = {}
         for i in range(len(x_leaves)):
-            key = (jnp.dtype(x_leaves[i].dtype), jnp.dtype(z_leaves[i].dtype),
+            key = (jnp.dtype(z_leaves[i].dtype),
                    jnp.dtype(gn_leaves[i].dtype),
                    jnp.dtype(rho_leaves[i].dtype))
             groups.setdefault(key, []).append(i)
@@ -351,29 +363,24 @@ def _make_round_pallas(plan: CommPlan, vgrads: VGradFn, gamma, robust,
         new_rho: list = [None] * len(x_leaves)
         new_buf: list = [None] * len(x_leaves)
 
-        def one_node(x_, z_, gn_, go_, vi_, wi_, ri_, rb_, mki_, ro_, ao_,
-                     ws_, as_):
-            return rfast_update(
-                x_, z_, gn_, go_, vi_, wi_, ri_, rb_, mki_, ro_, ao_,
-                gamma=lr, w_self=ws_, a_self=as_,
+        def one_node(z_, gn_, go_, ri_, rb_, mki_, ro_, ao_, as_):
+            return rfast_commit(
+                z_, gn_, go_, ri_, rb_, mki_, ro_, ao_, a_self=as_,
                 impl="pallas", interpret=interpret)
 
         for idxs in groups.values():
             flat2 = lambda ls, lead: jnp.concatenate(
                 [ls[i].reshape(lead, -1) for i in idxs], axis=1)
-            x_f = flat2(x_leaves, n)
             z_f = flat2(z_leaves, n)
             gn_f = flat2(gn_leaves, n)
             go_f = flat2(go_leaves, n)
-            vin_f = jnp.concatenate(
-                [vin_leaves[i].reshape(n, kw, -1) for i in idxs], axis=2)
             rho_f = flat2(rho_leaves, e_pad)
             buf_f = flat2(buf_leaves, e_pad)
 
-            _, _, z_out, rout_new, rbuf_new = jax.vmap(one_node)(
-                x_f, z_f, gn_f, go_f, vin_f, in_w_wt,
+            z_out, rout_new, rbuf_new = jax.vmap(one_node)(
+                z_f, gn_f, go_f,
                 rho_f[in_a_epos], buf_f[in_a_epos], mask_in,
-                rho_f[out_a_epos], out_a_wt, w_diag, a_diag)
+                rho_f[out_a_epos], out_a_wt, a_diag)
 
             # scatter per-node slot results back to the edge-major arrays
             # (each real edge is owned by exactly one (node, slot) pair;

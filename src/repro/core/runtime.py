@@ -95,6 +95,7 @@ def make_rfast_round(
     momentum: float = 0.0,
     impl: str = "jnp",
     interpret: bool | None = None,
+    donate: bool = False,
 ):
     """Build ``round_fn(state, batches, keys, masks) -> (state, metrics)``.
 
@@ -102,11 +103,13 @@ def make_rfast_round(
     ``masks``: (E_pad,) float deliveries for BOTH graphs (1 = delivered) or
     None for the synchronous special case.  ``gamma`` may be a schedule.
     ``impl``: "jnp" (GSPMD dense mixing) or "pallas" (fused update kernel).
+    ``donate=True`` jits the round with the state donated (in-place
+    x/z/ρ/ρ̃ commits; callers must rebind and not reuse the old state).
     """
     vgrads = _make_vgrads(grad_fn, node_axes)
     return make_protocol_round(spec, vgrads, gamma=gamma, robust=robust,
                                momentum=momentum, impl=impl,
-                               interpret=interpret)
+                               interpret=interpret, donate=donate)
 
 
 # --------------------------------------------------------------------- #

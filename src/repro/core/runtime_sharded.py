@@ -111,7 +111,9 @@ def init_sharded_state(topo: Topology | CommPlan, params: Any, grad_fn: GradFn,
     zer = lambda S: jax.tree.map(
         lambda l: jnp.zeros((n, S) + l.shape, l.dtype), params)
     return ShardedState(
-        step=jnp.zeros((), jnp.int32), x=x, z=g0, g_prev=g0,
+        # g_prev gets its own buffer: donating rounds forbid aliased leaves
+        step=jnp.zeros((), jnp.int32), x=x, z=g0,
+        g_prev=jax.tree.map(jnp.copy, g0),
         rho_out=zer(sa), rho_buf=zer(sa),
         mail_v=zer(sw) if robust else None,
         m=jax.tree.map(jnp.zeros_like, x) if momentum else None)
@@ -141,10 +143,14 @@ def make_sharded_round(
     node_axes: Sequence[str],
     momentum: float = 0.0,
     robust: bool = False,
+    donate: bool = False,
 ):
     """Build ``round_fn(state, batches, keys, masks) -> (state, metrics)``.
 
     ``masks``: (n, S_w + S_a) float deliveries in robust mode, else None.
+    ``donate=True`` jits the round with the state donated (in-place
+    protocol-state commits; callers must rebind and not reuse the old
+    state).
     """
     plan = as_comm_plan(topo)
     slots_w, slots_a = plan.slots_w, plan.slots_a
@@ -271,4 +277,6 @@ def make_sharded_round(
             fn, mesh, in_specs, out_specs, na)(*args)
         return new_state, {"loss": losses.mean(), "losses": losses}
 
+    if donate:
+        return jax.jit(round_fn, donate_argnums=(0,))
     return round_fn

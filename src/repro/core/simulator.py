@@ -2,12 +2,25 @@
 
 Executes the *exact* R-FAST recursion under an arbitrary realized
 asynchronous schedule (activations + per-edge payload stamps produced by
-``schedule.py``), entirely in JAX with a ``lax.scan`` over global
-iterations.  The simulator is the faithful-reproduction engine: every
-update is S.1–S.5 of Algorithm 2 verbatim — the formulas themselves live
-in :mod:`repro.core.protocol`; this engine owns only the *delayed-read*
-realization (history buffers indexed by payload stamps) over the dense
-edge arrays of a :class:`repro.core.plan.CommPlan`.
+``schedule.py``), entirely in JAX with a ``lax.scan``.  The simulator is
+the faithful-reproduction engine: every update is S.1–S.5 of Algorithm 2
+verbatim — the formulas themselves live in :mod:`repro.core.protocol`;
+this engine owns only the *delayed-read* realization (history buffers
+indexed by payload stamps) over a :class:`repro.core.plan.CommPlan`.
+
+Two execution modes share one state layout:
+
+* ``mode="wavefront"`` (default) — the schedule is compiled host-side
+  (:func:`repro.core.schedule.build_wavefront_plan`) into groups of
+  events with distinct agents whose payload stamps predate the group;
+  each scan step vmaps the per-agent update across one group and commits
+  **O(p) delta rows** into the histories (``v_hist[slot, agent]`` /
+  ``rho_hist[slot, out-edge]``) instead of full-array snapshots.  Stale
+  reads are pre-resolved to ring slots by the host pass, so the device
+  never materializes an O(n·p) snapshot per event.
+* ``mode="event"`` — the original one-event-per-step engine with full
+  ``(H, n, p)`` / ``(H, E_A, p)`` snapshot commits; kept as the oracle
+  the wavefront path is tested against.
 
 State representation (flat parameter vectors, ``p`` = dimension):
 
@@ -15,8 +28,9 @@ State representation (flat parameter vectors, ``p`` = dimension):
   last-sampled-gradient variables.
 * ``rho``       — ``(E_A, p)`` running sums ρ_{ji} held at the *sender* of
   each A-edge; ``rho_buf`` — the receiver's buffers ρ̃_{ij}.
-* ``v_hist`` / ``rho_hist`` — rolling snapshots indexed by global stamp mod
-  ``H`` (``H ≥ D+2``) realizing the delayed reads ``v_j^{k-d}``, ``ρ^{k-d}``.
+* ``v_hist`` / ``rho_hist`` — history rings (``H ≥ D+2``) realizing the
+  delayed reads ``v_j^{k-d}``, ``ρ^{k-d}``; snapshot-indexed in event
+  mode, per-writer-counter delta-indexed in wavefront mode.
 
 Mass-conservation invariant (Lemma 3), checked in tests under arbitrary
 delay/loss schedules::
@@ -34,10 +48,12 @@ import numpy as np
 
 from .plan import CommPlan, as_comm_plan
 from .protocol import consensus_mix, descent_step, mailbox_merge, tracking_step
-from .schedule import Schedule
+from .schedule import Schedule, build_wavefront_plan
 from .topology import Topology
 
-__all__ = ["RFASTState", "init_state", "rfast_scan", "run_rfast", "tracked_mass"]
+__all__ = ["RFASTState", "PackedState", "init_state", "pack_state",
+           "unpack_state", "wave_inputs", "rfast_scan",
+           "rfast_wavefront_scan", "run_rfast", "tracked_mass"]
 
 GradFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 # grad_fn(node_id, x_node, rng_key) -> gradient, all traced.
@@ -55,13 +71,37 @@ class RFASTState(NamedTuple):
     rho_hist: jnp.ndarray # (H, E_A, p)
 
 
-def _sim_edges(plan: CommPlan):
-    """Unpadded leading slices of the dense edge arrays (the schedule's
-    per-edge stamp arrays are sized (K, max(1, E)) — match them)."""
+class _Prepared(NamedTuple):
+    """CommPlan slices as device constants, converted once per engine
+    build (not once per trace)."""
+
+    w_diag: jnp.ndarray
+    a_diag: jnp.ndarray
+    src_w: jnp.ndarray; dst_w: jnp.ndarray; w_edge: jnp.ndarray
+    src_a: jnp.ndarray; dst_a: jnp.ndarray; a_edge: jnp.ndarray
+    in_w_src: jnp.ndarray; in_w_wt: jnp.ndarray
+    in_a_epos: jnp.ndarray; in_a_val: jnp.ndarray
+    out_a_epos: jnp.ndarray; out_a_wt: jnp.ndarray; out_a_val: jnp.ndarray
+
+
+def _prepare(plan: CommPlan) -> _Prepared:
     ew = max(1, plan.n_edges_w)
     ea = max(1, plan.n_edges_a)
-    return (plan.src_w[:ew], plan.dst_w[:ew], plan.w_edge[:ew],
-            plan.src_a[:ea], plan.dst_a[:ea], plan.a_edge[:ea])
+    # the schedule's per-edge stamp arrays are sized (K, max(1, E)) — the
+    # dense edge slices must match them, hence the unpadded leading cut
+    return _Prepared(
+        w_diag=jnp.asarray(plan.w_diag), a_diag=jnp.asarray(plan.a_diag),
+        src_w=jnp.asarray(plan.src_w[:ew]), dst_w=jnp.asarray(plan.dst_w[:ew]),
+        w_edge=jnp.asarray(plan.w_edge[:ew]),
+        src_a=jnp.asarray(plan.src_a[:ea]), dst_a=jnp.asarray(plan.dst_a[:ea]),
+        a_edge=jnp.asarray(plan.a_edge[:ea]),
+        in_w_src=jnp.asarray(plan.in_w_src), in_w_wt=jnp.asarray(plan.in_w_wt),
+        in_a_epos=jnp.asarray(plan.in_a_epos),
+        in_a_val=jnp.asarray(plan.in_a_val),
+        out_a_epos=jnp.asarray(plan.out_a_epos),
+        out_a_wt=jnp.asarray(plan.out_a_wt),
+        out_a_val=jnp.asarray(plan.out_a_val),
+    )
 
 
 def init_state(
@@ -74,7 +114,9 @@ def init_state(
     """Paper init: z_i^0 = ∇f_i(x_i^0; ζ_i^0); v = ρ = ρ̃ = 0."""
     plan = as_comm_plan(topo)
     n = plan.n
-    x0 = jnp.asarray(x0, jnp.float32)
+    # copy (not asarray): the state may be donated by the engines, and the
+    # caller's x0 buffer must survive the run
+    x0 = jnp.array(x0, jnp.float32)
     if x0.ndim == 1:
         x0 = jnp.tile(x0[None, :], (n, 1))
     p = x0.shape[1]
@@ -87,7 +129,7 @@ def init_state(
         x=x0,
         v=zeros_np,
         z=g0,
-        g_prev=g0,
+        g_prev=jnp.copy(g0),   # distinct buffer: donation forbids aliases
         rho=jnp.zeros((e_a, p), jnp.float32),
         rho_buf=jnp.zeros((e_a, p), jnp.float32),
         v_hist=jnp.zeros((H, n, p), jnp.float32),
@@ -95,11 +137,14 @@ def init_state(
     )
 
 
+# --------------------------------------------------------------------- #
+# event-serial engine (snapshot histories) — the equivalence oracle
+# --------------------------------------------------------------------- #
 def _step(
     state: RFASTState,
     inputs,
     *,
-    plan: CommPlan,
+    pp: _Prepared,
     grad_fn: GradFn,
     gamma: float,
     H: int,
@@ -108,32 +153,27 @@ def _step(
     a = agent
     k = state.k
 
-    sw, dw, we, sa, da, ae = _sim_edges(plan)
-    diag_w = jnp.asarray(plan.w_diag)
-    diag_a = jnp.asarray(plan.a_diag)
-    src_w = jnp.asarray(sw); dst_w = jnp.asarray(dw)
-    src_a = jnp.asarray(sa); dst_a = jnp.asarray(da)
-    w_edge = jnp.asarray(we); a_edge = jnp.asarray(ae)
-
     # (S.1) local descent ------------------------------------------------
     v_new = descent_step(state.x[a], state.z[a], gamma)
 
     # (S.2a) consensus pull over G(W) with stale payloads ------------------
-    vals_v = state.v_hist[stamp_v % H, src_w, :]          # (E_W, p)
-    mask_w = (dst_w == a).astype(vals_v.dtype)[:, None]
-    x_a = consensus_mix(diag_w[a], v_new, mask_w * w_edge[:, None], vals_v)
+    vals_v = state.v_hist[stamp_v % H, pp.src_w, :]       # (E_W, p)
+    mask_w = (pp.dst_w == a).astype(vals_v.dtype)[:, None]
+    x_a = consensus_mix(pp.w_diag[a], v_new, mask_w * pp.w_edge[:, None],
+                        vals_v)
 
     # (S.2b) robust gradient tracking -------------------------------------
     g_new = grad_fn(a, x_a, key)
-    vals_rho = state.rho_hist[stamp_rho % H, jnp.arange(src_a.shape[0]), :]
-    mask_a_in = (dst_a == a).astype(vals_rho.dtype)[:, None]
+    vals_rho = state.rho_hist[stamp_rho % H,
+                              jnp.arange(pp.src_a.shape[0]), :]
+    mask_a_in = (pp.dst_a == a).astype(vals_rho.dtype)[:, None]
     recv = jnp.sum(mask_a_in * (vals_rho - state.rho_buf), axis=0)
     z_half = tracking_step(state.z[a], recv, g_new, state.g_prev[a])
 
     # (S.2c) keep own share; push mass onto out-edges ----------------------
-    z_a = diag_a[a] * z_half
-    mask_a_out = (src_a == a).astype(vals_rho.dtype)[:, None]
-    rho = state.rho + mask_a_out * a_edge[:, None] * z_half[None, :]
+    z_a = pp.a_diag[a] * z_half
+    mask_a_out = (pp.src_a == a).astype(vals_rho.dtype)[:, None]
+    rho = state.rho + mask_a_out * pp.a_edge[:, None] * z_half[None, :]
 
     # (S.4) buffers take the consumed values -------------------------------
     rho_buf = mailbox_merge(vals_rho, state.rho_buf, mask_a_in)
@@ -154,17 +194,170 @@ def rfast_scan(
     grad_fn: GradFn,
     gamma: float,
     H: int,
+    *,
+    donate: bool = False,
 ):
-    """Returns a jitted ``(state, agent, stamp_v, stamp_rho, keys) -> state``."""
-    plan = as_comm_plan(topo)
-    step = partial(_step, plan=plan, grad_fn=grad_fn, gamma=gamma, H=H)
+    """Event-serial engine: a jitted
+    ``(state, agent, stamp_v, stamp_rho, keys) -> state``.
 
-    @jax.jit
+    ``donate=True`` donates the state argument (in-place update of the
+    history rings) — the caller must not reuse the passed-in state.
+    """
+    plan = as_comm_plan(topo)
+    pp = _prepare(plan)
+    step = partial(_step, pp=pp, grad_fn=grad_fn, gamma=gamma, H=H)
+
     def run_chunk(state: RFASTState, agent, stamp_v, stamp_rho, keys):
         state, _ = jax.lax.scan(step, state, (agent, stamp_v, stamp_rho, keys))
         return state
 
-    return run_chunk
+    return jax.jit(run_chunk, donate_argnums=(0,) if donate else ())
+
+
+# --------------------------------------------------------------------- #
+# wavefront-batched engine (delta histories, vmapped lanes)
+# --------------------------------------------------------------------- #
+class PackedState(NamedTuple):
+    """Device layout of the wavefront engine: node variables fused into
+    one array and ρ/ρ̃ stacked, so a wavefront commits with four scatters.
+
+    * ``nodes``  — (n, 4, p): rows x, v, z, g_prev per node.
+    * ``rho2``   — (2·E_A, p): ρ rows then ρ̃ rows.
+    * ``v_hist`` — (H, n, p) delta rows indexed (writer count mod H, node).
+    * ``rho_hist`` — (H, E_A, p) delta rows (sender count mod H, edge).
+    """
+
+    nodes: jnp.ndarray
+    rho2: jnp.ndarray
+    v_hist: jnp.ndarray
+    rho_hist: jnp.ndarray
+
+
+class _WaveInputs(NamedTuple):
+    """Per-wavefront lane tables (one scan-step slice of a WavefrontPlan)."""
+
+    agent: jnp.ndarray      # (B,)
+    wslot: jnp.ndarray      # (B,)
+    w_self: jnp.ndarray     # (B,)
+    a_self: jnp.ndarray     # (B,)
+    rslot_v: jnp.ndarray    # (B, kw)
+    src_v: jnp.ndarray      # (B, kw)
+    w_in: jnp.ndarray       # (B, kw)
+    rslot_rho: jnp.ndarray  # (B, ka)
+    hist_epos: jnp.ndarray  # (B, ka)
+    a_val: jnp.ndarray      # (B, ka)
+    rho_gidx: jnp.ndarray   # (B, ko+ka)
+    out_wt: jnp.ndarray     # (B, ko)
+    keys: jnp.ndarray       # (B, 2)
+
+
+def pack_state(state: RFASTState) -> PackedState:
+    return PackedState(
+        nodes=jnp.stack([state.x, state.v, state.z, state.g_prev], axis=1),
+        rho2=jnp.concatenate([state.rho, state.rho_buf], axis=0),
+        v_hist=state.v_hist,
+        rho_hist=state.rho_hist,
+    )
+
+
+def unpack_state(packed: PackedState, k) -> RFASTState:
+    e_a = packed.rho_hist.shape[1]
+    return RFASTState(
+        k=jnp.asarray(k, jnp.int32),
+        x=packed.nodes[:, 0], v=packed.nodes[:, 1],
+        z=packed.nodes[:, 2], g_prev=packed.nodes[:, 3],
+        rho=packed.rho2[:e_a], rho_buf=packed.rho2[e_a:],
+        v_hist=packed.v_hist, rho_hist=packed.rho_hist,
+    )
+
+
+def _wave_step(
+    state: PackedState,
+    w: _WaveInputs,
+    *,
+    grad_fn: GradFn,
+    gamma: float,
+    ko: int,
+) -> tuple[PackedState, None]:
+    """One wavefront: B independent per-agent updates (distinct agents,
+    pre-wavefront reads only — see build_wavefront_plan), committed as
+    disjoint O(p) row scatters.  Padding lanes carry sentinel indices:
+    their gathers clamp and their commits drop.  All plan-derived tables
+    arrive pre-gathered per lane, so the body reads only the four state
+    arrays."""
+    node_rows = state.nodes[w.agent]                       # (B, 4, p)
+    x_l, z_l, gp_l = node_rows[:, 0], node_rows[:, 2], node_rows[:, 3]
+
+    # (S.1) local descent -------------------------------------------------
+    v_new = descent_step(x_l, z_l, gamma)                  # (B, p)
+
+    # (S.2a) consensus pull, reads resolved to delta-history rows ----------
+    vals_v = state.v_hist[w.rslot_v, w.src_v]              # (B, kw, p)
+    x_a = consensus_mix(w.w_self[:, None], v_new,
+                        w.w_in.swapaxes(0, 1)[..., None],
+                        vals_v.swapaxes(0, 1))             # sum over kw
+
+    # (S.2b) robust gradient tracking -------------------------------------
+    g_new = jax.vmap(grad_fn)(w.agent, x_a, w.keys)
+    vals_rho = state.rho_hist[w.rslot_rho, w.hist_epos]    # (B, ka, p)
+    rho_rows = state.rho2[w.rho_gidx]                      # (B, ko+ka, p)
+    recv = jnp.sum(w.a_val[..., None]
+                   * (vals_rho - rho_rows[:, ko:]), axis=1)
+    z_half = tracking_step(z_l, recv, g_new, gp_l)
+
+    # (S.2c) keep own share; push mass onto out-edges ----------------------
+    z_a = w.a_self[:, None] * z_half
+    rho_new = rho_rows[:, :ko] \
+        + w.out_wt[..., None] * z_half[:, None, :]         # (B, ko, p)
+
+    # commit: disjoint row scatters; (S.4) ρ̃ rows take the consumed values
+    node_new = jnp.stack([x_a, v_new, z_a, g_new], axis=1)
+    rho_commit = jnp.concatenate([rho_new, vals_rho], axis=1)
+    return PackedState(
+        nodes=state.nodes.at[w.agent].set(node_new, mode="drop"),
+        rho2=state.rho2.at[w.rho_gidx].set(rho_commit, mode="drop"),
+        v_hist=state.v_hist.at[w.wslot, w.agent].set(v_new, mode="drop"),
+        rho_hist=state.rho_hist.at[w.wslot[:, None], w.rho_gidx[:, :ko]]
+        .set(rho_new, mode="drop"),
+    ), None
+
+
+def rfast_wavefront_scan(
+    topo: Topology | CommPlan,
+    grad_fn: GradFn,
+    gamma: float,
+    *,
+    donate: bool = True,
+):
+    """Wavefront engine: a jitted ``(packed, wave_inputs) -> packed`` where
+    ``wave_inputs`` is a :class:`_WaveInputs` of ``(n_waves, B, ...)``
+    lane arrays from a :class:`~repro.core.schedule.WavefrontPlan`.  The
+    state is donated by default (the histories update in place; callers
+    rebind)."""
+    plan = as_comm_plan(topo)
+    step = partial(_wave_step, grad_fn=grad_fn, gamma=gamma, ko=plan.ko)
+
+    def run_waves(state: PackedState, waves: _WaveInputs):
+        state, _ = jax.lax.scan(step, state, waves)
+        return state
+
+    return jax.jit(run_waves, donate_argnums=(0,) if donate else ())
+
+
+def wave_inputs(wf, step_keys: jnp.ndarray) -> _WaveInputs:
+    """Device lane tables for a WavefrontPlan (kidx == K selects the zero
+    padding key row)."""
+    lane_keys = jnp.concatenate(
+        [step_keys, jnp.zeros((1, 2), step_keys.dtype)])[jnp.asarray(wf.kidx)]
+    return _WaveInputs(
+        agent=jnp.asarray(wf.agent), wslot=jnp.asarray(wf.wslot),
+        w_self=jnp.asarray(wf.w_self), a_self=jnp.asarray(wf.a_self),
+        rslot_v=jnp.asarray(wf.rslot_v), src_v=jnp.asarray(wf.src_v),
+        w_in=jnp.asarray(wf.w_in), rslot_rho=jnp.asarray(wf.rslot_rho),
+        hist_epos=jnp.asarray(wf.hist_epos), a_val=jnp.asarray(wf.a_val),
+        rho_gidx=jnp.asarray(wf.rho_gidx), out_wt=jnp.asarray(wf.out_wt),
+        keys=lane_keys,
+    )
 
 
 def tracked_mass(state: RFASTState) -> jnp.ndarray:
@@ -182,30 +375,83 @@ def run_rfast(
     seed: int = 0,
     eval_every: int = 0,
     eval_fn: Callable[[RFASTState, float], dict] | None = None,
+    mode: str = "wavefront",
 ) -> tuple[RFASTState, list[dict]]:
-    """Run the full schedule; optionally evaluate every ``eval_every`` events."""
+    """Run the full schedule; optionally evaluate every ``eval_every`` events.
+
+    ``mode="wavefront"`` (default) runs the batched engine with delta
+    histories; ``mode="event"`` the one-event-per-step snapshot engine.
+    Both realize identical Algorithm-2 semantics (tested to fp32
+    tolerance); final ``v_hist``/``rho_hist`` *contents* differ by
+    representation.
+
+    Both modes donate the running state between chunks (in-place
+    updates): ``eval_fn`` must extract what it needs (floats/arrays of
+    its own) rather than retain the state object it is handed.
+    """
+    if mode not in ("wavefront", "event"):
+        raise ValueError(f"mode must be 'wavefront' or 'event', got {mode!r}")
     plan = as_comm_plan(topo)
     H = int(schedule.D) + 2
     key = jax.random.PRNGKey(seed)
     key, init_key = jax.random.split(key)
     state = init_state(plan, x0, grad_fn, init_key, H)
-    chunk = rfast_scan(plan, grad_fn, gamma, H)
 
     K = schedule.K
     step_keys = jax.random.split(key, K)
-    agent = jnp.asarray(schedule.agent)
-    stamp_v = jnp.asarray(schedule.stamp_v)
-    stamp_rho = jnp.asarray(schedule.stamp_rho)
-
     metrics: list[dict] = []
     if eval_every <= 0:
         eval_every = K
-    for s in range(0, K, eval_every):
-        e = min(K, s + eval_every)
-        state = chunk(state, agent[s:e], stamp_v[s:e], stamp_rho[s:e],
-                      step_keys[s:e])
+
+    if mode == "event":
+        chunk = rfast_scan(plan, grad_fn, gamma, H, donate=True)
+        agent = jnp.asarray(schedule.agent)
+        stamp_v = jnp.asarray(schedule.stamp_v)
+        stamp_rho = jnp.asarray(schedule.stamp_rho)
+        for s in range(0, K, eval_every):
+            e = min(K, s + eval_every)
+            state = chunk(state, agent[s:e], stamp_v[s:e], stamp_rho[s:e],
+                          step_keys[s:e])
+            if eval_fn is not None:
+                m = eval_fn(state, float(schedule.times[e - 1]))
+                m["k"] = e
+                metrics.append(m)
+        return state, metrics
+
+    wf = build_wavefront_plan(schedule, plan, H, break_every=eval_every)
+    runner = rfast_wavefront_scan(plan, grad_fn, gamma, donate=True)
+    waves = wave_inputs(wf, step_keys)
+    packed = pack_state(state)
+
+    # chunk boundaries in wave space (waves never cross eval boundaries);
+    # pad every chunk to the max wave count so the runner compiles once
+    bounds = [int(np.searchsorted(wf.event_start, s))
+              for s in range(0, K, eval_every)] + [wf.n_waves]
+    cmax = max(b1 - b0 for b0, b1 in zip(bounds, bounds[1:]))
+    n_pad = plan.n
+
+    for ci, (w0, w1) in enumerate(zip(bounds, bounds[1:])):
+        pad = cmax - (w1 - w0)
+
+        def sl(arr, fill):
+            if not pad:
+                return arr[w0:w1]
+            return jnp.concatenate(
+                [arr[w0:w1], jnp.full((pad,) + arr.shape[1:], fill,
+                                      arr.dtype)])
+
+        chunk_waves = _WaveInputs(
+            agent=sl(waves.agent, n_pad), wslot=sl(waves.wslot, 0),
+            w_self=sl(waves.w_self, 0.0), a_self=sl(waves.a_self, 0.0),
+            rslot_v=sl(waves.rslot_v, 0), src_v=sl(waves.src_v, 0),
+            w_in=sl(waves.w_in, 0.0), rslot_rho=sl(waves.rslot_rho, 0),
+            hist_epos=sl(waves.hist_epos, 0), a_val=sl(waves.a_val, 0.0),
+            rho_gidx=sl(waves.rho_gidx, 2 * max(1, plan.n_edges_a)),
+            out_wt=sl(waves.out_wt, 0.0), keys=sl(waves.keys, 0))
+        packed = runner(packed, chunk_waves)
+        e = min(K, (ci + 1) * eval_every)
         if eval_fn is not None:
-            m = eval_fn(state, float(schedule.times[e - 1]))
+            m = eval_fn(unpack_state(packed, e), float(schedule.times[e - 1]))
             m["k"] = e
             metrics.append(m)
-    return state, metrics
+    return unpack_state(packed, K), metrics

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["rfast_update_pallas", "BLK_R", "LANE"]
+__all__ = ["rfast_update_pallas", "rfast_commit_pallas", "BLK_R", "LANE"]
 
 BLK_R = 256     # rows per block (8-aligned for fp32 sublanes)
 LANE = 128      # TPU lane width
@@ -63,6 +63,70 @@ def _kernel(scal_ref, w_in_ref, mask_ref, a_out_ref,
         rho_buf_o_ref[k] = (m * rho_in_ref[k].astype(jnp.float32)
                             + (1.0 - m) * rho_buf_ref[k].astype(jnp.float32)
                             ).astype(rho_buf_o_ref.dtype)
+
+
+def _commit_kernel(scal_ref, mask_ref, a_out_ref,
+                   z_ref, gn_ref, go_ref, rho_in_ref, rho_buf_ref,
+                   rho_out_ref,
+                   z_o_ref, rho_out_o_ref, rho_buf_o_ref):
+    """Commit-only variant: the S.2b–S.4 tail without the x'/v outputs.
+
+    The runtime commits x⁺ from its own consensus pull (the gradient must
+    be sampled at that exact point) and discards the full kernel's x'/v
+    writes — 2 of its 5 output streams.  This kernel also drops the x and
+    (Kw, R, 128) v_in *input* streams the skipped outputs fed, so per
+    block it moves (3 + 2·Ka + Ko) tiles in and (1 + Ka + Ko) out versus
+    the full kernel's (4 + Kw + 2·Ka + Ko) / (3 + Ka + Ko)."""
+    a_self = scal_ref[0, 0]
+
+    z = z_ref[...].astype(jnp.float32)
+    recv = jnp.zeros_like(z)
+    for k in range(rho_in_ref.shape[0]):
+        m = mask_ref[0, k]
+        recv += m * (rho_in_ref[k].astype(jnp.float32)
+                     - rho_buf_ref[k].astype(jnp.float32))
+    z_half = z + recv + gn_ref[...].astype(jnp.float32) \
+        - go_ref[...].astype(jnp.float32)
+
+    z_o_ref[...] = (a_self * z_half).astype(z_o_ref.dtype)
+    for k in range(rho_out_ref.shape[0]):
+        rho_out_o_ref[k] = (rho_out_ref[k].astype(jnp.float32)
+                            + a_out_ref[0, k] * z_half
+                            ).astype(rho_out_o_ref.dtype)
+    for k in range(rho_buf_ref.shape[0]):
+        m = mask_ref[0, k]
+        rho_buf_o_ref[k] = (m * rho_in_ref[k].astype(jnp.float32)
+                            + (1.0 - m) * rho_buf_ref[k].astype(jnp.float32)
+                            ).astype(rho_buf_o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rfast_commit_pallas(z, g_new, g_old, rho_in, rho_buf, mask, rho_out,
+                        a_out, scalars, *, interpret=True):
+    """Commit-only launch: operands as in :func:`rfast_update_pallas`
+    minus x/v_in/w_in; scalars (1, 1) = [a_self].
+    Returns (z', rho_out', rho_buf')."""
+    R = z.shape[0]
+    grid = (R // BLK_R,)
+    blk = lambda: pl.BlockSpec((BLK_R, LANE), lambda i: (i, 0))
+    blk_k = lambda K: pl.BlockSpec((K, BLK_R, LANE), lambda i: (0, i, 0))
+    smem = lambda K: pl.BlockSpec((1, K), lambda i: (0, 0))
+
+    Ka, Ko = rho_in.shape[0], rho_out.shape[0]
+    out_shapes = (
+        jax.ShapeDtypeStruct(z.shape, z.dtype),           # z'
+        jax.ShapeDtypeStruct(rho_out.shape, rho_out.dtype),
+        jax.ShapeDtypeStruct(rho_buf.shape, rho_buf.dtype),
+    )
+    return pl.pallas_call(
+        _commit_kernel,
+        grid=grid,
+        in_specs=[smem(1), smem(Ka), smem(Ko),
+                  blk(), blk(), blk(), blk_k(Ka), blk_k(Ka), blk_k(Ko)],
+        out_specs=(blk(), blk_k(Ko), blk_k(Ka)),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(scalars, mask, a_out, z, g_new, g_old, rho_in, rho_buf, rho_out)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

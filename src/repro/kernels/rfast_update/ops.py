@@ -11,10 +11,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import BLK_R, LANE, rfast_update_pallas
-from .ref import rfast_update_ref
+from .kernel import (BLK_R, LANE, rfast_commit_pallas, rfast_update_pallas)
+from .ref import rfast_commit_ref, rfast_update_ref
 
-__all__ = ["rfast_update", "pad_to_blocks", "unpad"]
+__all__ = ["rfast_update", "rfast_commit", "pad_to_blocks", "unpad"]
 
 
 def pad_to_blocks(v: jax.Array) -> tuple[jax.Array, int]:
@@ -30,14 +30,27 @@ def unpad(v: jax.Array, P: int) -> jax.Array:
     return v.reshape(*v.shape[:-2], -1)[..., :P]
 
 
-@partial(jax.jit, static_argnames=("impl", "interpret"))
+@partial(jax.jit, static_argnames=("impl", "interpret", "outputs"))
 def rfast_update(x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask,
                  rho_out, a_out, *, gamma, w_self, a_self,
-                 impl: str = "ref", interpret: bool = True):
+                 impl: str = "ref", interpret: bool = True,
+                 outputs: str = "full"):
     """Flat-vector protocol update; see ref.py for the math.
 
     impl="ref" uses the jnp oracle; impl="pallas" the fused kernel.
+    outputs="full" returns (x', v, z', rho_out', rho_buf');
+    outputs="commit" skips the x'/v streams — and the x/v_in/w_in inputs
+    that feed only them — returning (z', rho_out', rho_buf') for callers
+    that commit x⁺ from their own consensus pull.
     """
+    if outputs not in ("full", "commit"):
+        raise ValueError(f"outputs must be 'full' or 'commit', "
+                         f"got {outputs!r}")
+    if outputs == "commit":
+        return rfast_commit(z, g_new, g_old, rho_in, rho_buf, mask, rho_out,
+                            a_out, a_self=a_self, impl=impl,
+                            interpret=interpret)
+
     if impl == "ref":
         return rfast_update_ref(
             x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask, rho_out,
@@ -59,3 +72,25 @@ def rfast_update(x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask,
     x_n, v_n, z_n, ro_n, rb_n = out
     return (unpad(x_n, P), unpad(v_n, P), unpad(z_n, P),
             unpad(ro_n, P), unpad(rb_n, P))
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret"))
+def rfast_commit(z, g_new, g_old, rho_in, rho_buf, mask, rho_out, a_out, *,
+                 a_self, impl: str = "ref", interpret: bool = True):
+    """Commit-only protocol update: the S.2b–S.4 tail of
+    :func:`rfast_update` without the x'/v streams (see ref.py).
+    Returns (z', rho_out', rho_buf')."""
+    if impl == "ref":
+        return rfast_commit_ref(z, g_new, g_old, rho_in, rho_buf, mask,
+                                rho_out, a_out, a_self=a_self)
+    zb, P = pad_to_blocks(z)
+    gnb, _ = pad_to_blocks(g_new)
+    gob, _ = pad_to_blocks(g_old)
+    rib, _ = pad_to_blocks(rho_in)
+    rbb, _ = pad_to_blocks(rho_buf)
+    rob, _ = pad_to_blocks(rho_out)
+    scal = jnp.asarray([[a_self]], jnp.float32)
+    z_n, ro_n, rb_n = rfast_commit_pallas(
+        zb, gnb, gob, rib, rbb, mask[None].astype(jnp.float32), rob,
+        a_out[None].astype(jnp.float32), scal, interpret=interpret)
+    return unpad(z_n, P), unpad(ro_n, P), unpad(rb_n, P)

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["rfast_update_ref"]
+__all__ = ["rfast_update_ref", "rfast_commit_ref"]
 
 
 def rfast_update_ref(x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask,
@@ -39,3 +39,23 @@ def rfast_update_ref(x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask,
     dt = x.dtype
     return (x_new.astype(dt), v.astype(dt), z_new.astype(dt),
             rho_out_new.astype(dt), rho_buf_new.astype(rho_buf.dtype))
+
+
+def rfast_commit_ref(z, g_new, g_old, rho_in, rho_buf, mask, rho_out, a_out,
+                     *, a_self):
+    """Commit-only oracle: the S.2b–S.4 tail of :func:`rfast_update_ref`.
+
+    Skips the ``x'``/``v`` outputs (and the x/v_in/w_in inputs that feed
+    only them) for callers that commit x⁺ from their own consensus pull —
+    the runtime's pallas backend, which discards those writes anyway.
+    Returns (z', rho_out', rho_buf')."""
+    f32 = jnp.float32
+    zf = z.astype(f32)
+    recv = jnp.einsum("k,kp->p", mask.astype(f32),
+                      rho_in.astype(f32) - rho_buf.astype(f32))
+    z_half = zf + recv + g_new.astype(f32) - g_old.astype(f32)
+    rho_out_new = rho_out.astype(f32) + a_out.astype(f32)[:, None] * z_half
+    rho_buf_new = jnp.where(mask[:, None] > 0, rho_in, rho_buf)
+    dt = z.dtype
+    return ((a_self * z_half).astype(dt), rho_out_new.astype(dt),
+            rho_buf_new.astype(rho_buf.dtype))

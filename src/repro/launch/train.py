@@ -80,9 +80,12 @@ def main() -> None:
     gamma = warmup_cosine(args.gamma, warmup=max(1, args.steps // 20),
                           total=args.steps)
     robust = args.loss_prob > 0
-    round_fn = jax.jit(make_rfast_round(
+    # donate=True: the protocol state (x/z/ρ/ρ̃ — 2·|params|·N + 2·E_pad
+    # buffers) updates in place instead of double-buffering; the loop
+    # below rebinds ``state`` every step and never replays an old one
+    round_fn = make_rfast_round(
         spec, grad_fn, gamma=gamma, robust=robust,
-        momentum=args.momentum, impl=args.impl))
+        momentum=args.momentum, impl=args.impl, donate=True)
 
     key = jax.random.PRNGKey(args.seed)
     params = init_params(cfg, key)
