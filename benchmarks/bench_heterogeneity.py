@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import get_topology
+from repro.core import NetworkScenario, get_topology
 from repro.core.baselines import run_dpsgd
 from .common import (csv_row, eval_fn_for, logistic_setup,
                      run_rfast_logistic, stopwatch)
@@ -12,11 +12,12 @@ from .common import (csv_row, eval_fn_for, logistic_setup,
 
 def run(n: int = 7, K: int = 12_000, gamma: float = 5e-3) -> list[str]:
     rows = []
+    sc = NetworkScenario(latency=0.3)   # shared clock for both rows
     for het in (False, True):
         tag = "het" if het else "iid"
         prob = logistic_setup(n, het=het)
         state, metrics, wall = run_rfast_logistic(prob, "directed_ring", K,
-                                                  gamma=gamma)
+                                                  gamma=gamma, scenario=sc)
         rows.append(csv_row(
             f"heterogeneity/{tag}/R-FAST", wall / K * 1e6,
             f"loss={metrics[-1]['loss']:.4f};acc={metrics[-1]['acc']:.3f}"))
@@ -24,7 +25,8 @@ def run(n: int = 7, K: int = 12_000, gamma: float = 5e-3) -> list[str]:
         topo = get_topology("undirected_ring", n)
         with stopwatch() as sw:
             _, ms = run_dpsgd(topo, prob.grad_fn(), jnp.zeros((n, prob.p)),
-                              gamma, K // n, eval_fn=eval_fn_for(prob),
+                              gamma, K // n, scenario=sc,
+                              eval_fn=eval_fn_for(prob),
                               eval_every=K // n // 4)
         wall = sw["s"]
         rows.append(csv_row(

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import get_topology
+from repro.core import NetworkScenario, get_topology
 from repro.core.baselines import run_osgp
 from .common import (csv_row, eval_fn_for, logistic_setup,
                      run_rfast_logistic, stopwatch)
@@ -15,8 +15,10 @@ def run(n: int = 7, K: int = 14_000, gamma: float = 5e-3) -> list[str]:
     prob = logistic_setup(n)
     eval_fn = eval_fn_for(prob)
     for loss_p in (0.0, 0.2, 0.4):
+        # ONE scenario for both rows: same latency, same loss channel
+        sc = NetworkScenario(latency=0.3, loss=loss_p)
         state, metrics, wall = run_rfast_logistic(
-            prob, "binary_tree", K, gamma=gamma, loss_prob=loss_p)
+            prob, "binary_tree", K, gamma=gamma, scenario=sc)
         rows.append(csv_row(
             f"packet_loss/p{loss_p}/R-FAST", wall / K * 1e6,
             f"loss={metrics[-1]['loss']:.4f};acc={metrics[-1]['acc']:.3f}"))
@@ -24,7 +26,7 @@ def run(n: int = 7, K: int = 14_000, gamma: float = 5e-3) -> list[str]:
         topo = get_topology("directed_ring", n)
         with stopwatch() as sw:
             _, ms = run_osgp(topo, prob.grad_fn(), jnp.zeros((n, prob.p)),
-                             gamma, K, loss_prob=loss_p, eval_fn=eval_fn,
+                             gamma, K, scenario=sc, eval_fn=eval_fn,
                              eval_every=2000)
         wall = sw["s"]
         rows.append(csv_row(

@@ -1,0 +1,81 @@
+"""Head-to-head time-to-loss showdown (the paper's Fig. 5-6 claim):
+R-FAST vs Ring-AllReduce / D-PSGD / S-AB / AD-PSGD / OSGP, every
+algorithm on the SAME :class:`~repro.core.scenario.NetworkScenario`
+virtual clock — identical stragglers, latency, loss bursts, and
+crash/recovery windows, so the comparison is apples-to-apples.
+
+Row format: ``showdown/<scenario>/<algo>`` with derived
+``vtime=<time-to-target-loss>;acc=<final>;ratio=<vtime/vtime_rfast>``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import get_scenario, get_topology
+from repro.core.baselines import (run_adpsgd, run_dpsgd, run_osgp,
+                                  run_ring_allreduce, run_sab)
+from .common import (csv_row, eval_fn_for, logistic_setup,
+                     run_rfast_logistic, stopwatch, time_to_loss)
+
+SCENARIO_NAMES = ("straggler", "packet_loss", "crash_recovery")
+
+
+def run(target: float = 0.35, n: int = 8, rounds: int = 1000,
+        gamma: float = 5e-3, scenarios: tuple[str, ...] = SCENARIO_NAMES,
+        ) -> list[str]:
+    rows = []
+    prob = logistic_setup(n)
+    gfn = prob.grad_fn()
+    eval_fn = eval_fn_for(prob)
+    K = rounds * n
+    x0 = jnp.zeros((n, prob.p), jnp.float32)
+    topo_d = get_topology("directed_ring", n)
+    topo_u = get_topology("undirected_ring", n)
+
+    for sc_name in scenarios:
+        sc = get_scenario(sc_name, n)
+
+        def emit(name, wall, per, ms, t_ref=None):
+            t = time_to_loss(ms, target)
+            ratio = ""
+            if t_ref is not None:
+                ratio = (f";ratio={t / t_ref:.2f}"
+                         if np.isfinite(t) and np.isfinite(t_ref)
+                         and t_ref > 0 else ";ratio=inf")
+            rows.append(csv_row(
+                f"showdown/{sc_name}/{name}", wall / per * 1e6,
+                f"vtime={t:.1f};acc={ms[-1]['acc']:.3f}{ratio}"))
+            return t
+
+        # --- R-FAST (async, the scenario's event clock) ----------------
+        _, ms, wall = run_rfast_logistic(prob, "binary_tree", K,
+                                         gamma=gamma, scenario=sc,
+                                         eval_every=max(200, K // 40))
+        t_rfast = emit("R-FAST", wall, K, ms)
+
+        # --- synchronous baselines (the scenario's barrier clock) ------
+        ev = max(10, rounds // 40)
+        for name, fn, args in (
+            ("Ring-AllReduce", run_ring_allreduce,
+             (n, gfn, jnp.zeros(prob.p), gamma, rounds)),
+            ("D-PSGD", run_dpsgd, (topo_u, gfn, x0, gamma, rounds)),
+            ("S-AB", run_sab, (topo_d, gfn, x0, gamma, rounds)),
+        ):
+            with stopwatch() as sw:
+                _, ms = fn(*args, scenario=sc, eval_fn=eval_fn,
+                           eval_every=ev)
+            emit(name, sw["s"], rounds, ms, t_rfast)
+
+        # --- asynchronous baselines (same event clock) ------------------
+        for name, fn, topo in (("AD-PSGD", run_adpsgd, topo_u),
+                               ("OSGP", run_osgp, topo_d)):
+            with stopwatch() as sw:
+                _, ms = fn(topo, gfn, x0, gamma, K, scenario=sc,
+                           eval_fn=eval_fn, eval_every=max(200, K // 40))
+            emit(name, sw["s"], K, ms, t_rfast)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

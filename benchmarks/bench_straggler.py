@@ -9,10 +9,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import get_topology
+from repro.core import get_scenario, get_topology
 from repro.core.baselines import (run_adpsgd, run_dpsgd, run_osgp,
-                                  run_ring_allreduce, run_sab,
-                                  sync_round_times)
+                                  run_ring_allreduce, run_sab)
 from .common import (csv_row, eval_fn_for, logistic_setup,
                      run_rfast_logistic, stopwatch, time_to_loss)
 
@@ -28,10 +27,9 @@ def run(target: float = 0.35, n: int = 8, rounds: int = 1200,
         gamma: float = 5e-3) -> list[str]:
     rows = []
     for straggler in (False, True):
-        compute = np.ones(n)
-        if straggler:
-            compute[-1] = 4.0
-        tag = "straggler" if straggler else "uniform"
+        # the registry's canonical profiles (4x last node / all-equal)
+        sc = get_scenario("straggler" if straggler else "uniform", n)
+        tag = sc.name
         prob = logistic_setup(n)
         gfn = _grad_mean_adapter(prob)
         eval_fn = eval_fn_for(prob)
@@ -39,7 +37,7 @@ def run(target: float = 0.35, n: int = 8, rounds: int = 1200,
 
         # --- R-FAST (async, event-driven) ------------------------------
         state, metrics, wall = run_rfast_logistic(
-            prob, "binary_tree", K, gamma=gamma, compute_time=compute,
+            prob, "binary_tree", K, gamma=gamma, scenario=sc,
             eval_every=200)
         t_rfast = time_to_loss(metrics, target)
         acc = metrics[-1]["acc"]
@@ -49,11 +47,10 @@ def run(target: float = 0.35, n: int = 8, rounds: int = 1200,
         topo_d = get_topology("directed_ring", n)
         topo_u = get_topology("undirected_ring", n)
         x0 = jnp.zeros((n, prob.p), jnp.float32)
-        times = sync_round_times(compute, rounds)
 
         def bench_sync(name, fn, *args, **kw):
             with stopwatch() as sw:
-                _, ms = fn(*args, times=times, eval_fn=eval_fn,
+                _, ms = fn(*args, scenario=sc, eval_fn=eval_fn,
                            eval_every=25, **kw)
             wall = sw["s"]
             t = time_to_loss(ms, target)
@@ -70,7 +67,7 @@ def run(target: float = 0.35, n: int = 8, rounds: int = 1200,
 
         def bench_async(name, fn, topo, **kw):
             with stopwatch() as sw:
-                _, ms = fn(topo, gfn, x0, gamma, K, compute_time=compute,
+                _, ms = fn(topo, gfn, x0, gamma, K, scenario=sc,
                            eval_fn=eval_fn, eval_every=200, **kw)
             wall = sw["s"]
             t = time_to_loss(ms, target)

@@ -64,10 +64,10 @@ def time_to_loss(metrics: list[dict], target: float) -> float:
 
 
 def eval_fn_for(prob):
+    """Uniform eval hook: every algorithm hands over its *iterate* —
+    an (n, p) per-node stack, a (p,) single model, or the R-FAST state."""
     def eval_fn(state_or_x, t):
         x = state_or_x.x if hasattr(state_or_x, "x") else state_or_x
-        if isinstance(x, tuple):
-            x = x[0]
         xb = jnp.asarray(x)
         if xb.ndim == 2:
             xb = xb.mean(0)
@@ -77,12 +77,18 @@ def eval_fn_for(prob):
 
 
 def run_rfast_logistic(prob, topo_name: str, K: int, *, gamma=5e-3,
-                       compute_time=None, loss_prob=0.0, seed=0,
-                       eval_every=500, mode="wavefront"):
+                       scenario=None, compute_time=None, loss_prob=0.0,
+                       seed=0, eval_every=500, mode="wavefront"):
     n = prob.n
     topo = get_topology(topo_name, n)
-    sched = generate_schedule(topo, K, compute_time=compute_time,
-                              loss_prob=loss_prob, latency=0.3, seed=seed)
+    if scenario is not None:
+        if compute_time is not None or loss_prob != 0.0:
+            raise ValueError("pass either scenario= or the legacy "
+                             "compute_time/loss_prob kwargs, not both")
+        sched = generate_schedule(topo, K, scenario=scenario, seed=seed)
+    else:
+        sched = generate_schedule(topo, K, compute_time=compute_time,
+                                  loss_prob=loss_prob, latency=0.3, seed=seed)
     x0 = jnp.zeros((n, prob.p), jnp.float32)
     with stopwatch() as sw:
         state, metrics = run_rfast(topo, sched, prob.grad_fn(), x0, gamma,

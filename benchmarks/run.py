@@ -33,7 +33,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset: topologies,scaling,"
-                         "straggler,packet_loss,heterogeneity,kernels")
+                         "straggler,packet_loss,heterogeneity,kernels,"
+                         "showdown")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--impl", default="",
                     help="protocol backend for the kernels-suite round "
@@ -54,7 +55,8 @@ def main() -> None:
     from repro.core.protocol import IMPLS
 
     from . import (bench_heterogeneity, bench_kernels, bench_packet_loss,
-                   bench_scaling, bench_straggler, bench_topologies)
+                   bench_scaling, bench_showdown, bench_straggler,
+                   bench_topologies)
 
     if args.impl and args.impl not in IMPLS:
         ap.error(f"--impl must be one of {IMPLS}, got {args.impl!r}")
@@ -70,8 +72,12 @@ def main() -> None:
         "heterogeneity": lambda: bench_heterogeneity.run(
             K=4000 if args.quick else 12_000),
         "kernels": lambda: bench_kernels.run(impl=args.impl or None),
+        "showdown": lambda: bench_showdown.run(
+            rounds=150 if args.quick else 1000),
     }
     only = [s for s in args.only.split(",") if s]
+    meta = {"quick": bool(args.quick), "impl": args.impl or "both",
+            "only": only}
     print("name,us_per_call,derived")
     records: list[dict] = []
     failed = False
@@ -89,48 +95,86 @@ def main() -> None:
             print(row)
             records.append(_row_to_record(name, row))
     if args.json:
-        meta = {"quick": bool(args.quick), "impl": args.impl or "both",
-                "only": only}
         with open(args.json, "w") as f:
             json.dump({"meta": meta, "rows": records}, f, indent=2)
             f.write("\n")
         print(f"# wrote {len(records)} rows to {args.json}", file=sys.stderr)
     if args.compare:
-        regressions = _compare(records, args.compare,
-                               args.regression_threshold)
-        if regressions:
+        problems = _compare(records, args.compare,
+                            args.regression_threshold, run_meta=meta)
+        if problems:
             raise SystemExit(2)
     if failed:
         raise SystemExit(1)
 
 
 def _compare(records: list[dict], baseline_path: str,
-             threshold: float) -> list[dict]:
-    """Diff ``records`` against a committed BENCH_*.json; report and
-    return rows whose us_per_call regressed by more than ``threshold``."""
+             threshold: float, run_meta: dict | None = None) -> list[dict]:
+    """Diff ``records`` against a committed BENCH_*.json.
+
+    Returns every row that should fail the gate: regressions beyond
+    ``threshold``, rows that errored this run (``us_per_call`` is None),
+    and baseline rows that disappeared.  Regressions and vanished rows
+    are only gated when the run's quick/impl settings match the
+    baseline's recorded meta (quick changes per-call compile
+    amortization, impl changes which rows exist), and vanished rows only
+    for suites that actually ran (so ``--only`` subsets pass).  Errored
+    rows always gate — they are about this run, not the baseline.
+    """
     with open(baseline_path) as f:
-        old = {(r["suite"], r["name"]): r["us_per_call"]
-               for r in json.load(f)["rows"]}
-    regressions = []
+        base_doc = json.load(f)
+    old = {(r["suite"], r["name"]): r["us_per_call"]
+           for r in base_doc["rows"]}
+    base_meta = base_doc.get("meta", {})
+    # quick changes K (compile amortization) and impl changes which rows
+    # exist: per-call ratios and row presence are only comparable when
+    # this run was recorded the same way as the baseline
+    comparable = run_meta is None or all(
+        run_meta.get(k) == base_meta.get(k) for k in ("quick", "impl"))
+    fresh = {(r["suite"], r["name"]): r for r in records}
+    executed = {r["suite"] for r in records}
+    problems = []
     print(f"# --- compare vs {baseline_path} "
           f"(threshold +{threshold:.0%}) ---", file=sys.stderr)
     for r in records:
         base = old.get((r["suite"], r["name"]))
         new = r["us_per_call"]
-        if not base or not new:
+        if new is None:
+            print(f"# {r['suite']}/{r['name']}: ERRORED this run "
+                  f"({r['derived']})", file=sys.stderr)
+            problems.append({**r, "problem": "errored"})
+            continue
+        if not base:
+            # new row, or the baseline errored there (None) or recorded
+            # 0 us: no meaningful ratio to gate on
             continue
         ratio = new / base
-        flag = " REGRESSION" if ratio > 1 + threshold else ""
+        flag = " REGRESSION" if comparable and ratio > 1 + threshold else ""
         print(f"# {r['suite']}/{r['name']}: {base:.1f} -> {new:.1f} us "
               f"({ratio - 1:+.0%} vs baseline){flag}", file=sys.stderr)
         if flag:
-            regressions.append({**r, "baseline_us": base, "ratio": ratio})
-    if regressions:
-        print(f"# {len(regressions)} regression(s) beyond "
-              f"+{threshold:.0%}", file=sys.stderr)
+            problems.append({**r, "problem": "regression",
+                             "baseline_us": base, "ratio": ratio})
+    if not comparable:
+        print("# (regression/missing gates off: run quick/impl settings "
+              "differ from the baseline's)", file=sys.stderr)
     else:
-        print("# no regressions", file=sys.stderr)
-    return regressions
+        for (suite, name), base in old.items():
+            if suite in executed and (suite, name) not in fresh:
+                print(f"# {suite}/{name}: MISSING from this run "
+                      f"(baseline {base} us)", file=sys.stderr)
+                problems.append({"suite": suite, "name": name,
+                                 "problem": "missing", "baseline_us": base})
+    if problems:
+        kinds = {}
+        for p in problems:
+            kinds[p["problem"]] = kinds.get(p["problem"], 0) + 1
+        desc = ", ".join(f"{v} {k}" for k, v in sorted(kinds.items()))
+        print(f"# gate FAILS: {desc} (threshold +{threshold:.0%})",
+              file=sys.stderr)
+    else:
+        print("# no regressions, no missing/errored rows", file=sys.stderr)
+    return problems
 
 
 if __name__ == "__main__":

@@ -1,20 +1,20 @@
 """Straggler robustness head-to-head (the paper's Table II story):
-R-FAST vs Ring-AllReduce vs OSGP with one 4x-slow node.
+R-FAST vs Ring-AllReduce vs OSGP with one 4x-slow node — every
+algorithm on the SAME NetworkScenario virtual clock (the runnable doc
+for DESIGN.md §7).
 
     PYTHONPATH=src python examples/straggler_robustness.py
 """
-import time
-
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import binary_tree, directed_ring, generate_schedule, run_rfast
-from repro.core.baselines import run_osgp, run_ring_allreduce, sync_round_times
+from repro.core import (binary_tree, directed_ring, generate_schedule,
+                        get_scenario, run_rfast)
+from repro.core.baselines import run_osgp, run_ring_allreduce
 from repro.data import make_logistic_problem
 
 n, target = 8, 0.35
-compute = np.ones(n)
-compute[-1] = 4.0          # the straggler
+scenario = get_scenario("straggler", n)   # last node 4x slow, latency 0.3
 prob = make_logistic_problem(n, m=2800, d=64, batch=16, heterogeneous=True)
 gfn = prob.grad_fn()
 
@@ -31,23 +31,25 @@ def t_to(ms):
 
 
 K = 9600
-sched = generate_schedule(binary_tree(n), K, compute_time=compute,
-                          latency=0.3)
+# one scenario realization drives R-FAST's schedule...
+sched = generate_schedule(binary_tree(n), K, scenario=scenario)
 _, ms = run_rfast(binary_tree(n), sched, gfn, jnp.zeros((n, prob.p)),
                   gamma=5e-3, eval_every=300, eval_fn=eval_fn)
 t_rfast = t_to(ms)
 print(f"R-FAST         : vtime-to-loss={t_rfast:8.1f}  (1.00x)")
 
+# ... the same scenario's barrier clock prices the synchronous rounds ...
 rounds = K // n
-times = sync_round_times(compute, rounds)
 _, ms = run_ring_allreduce(n, gfn, jnp.zeros(prob.p), 5e-3, rounds,
-                           times=times, eval_fn=eval_fn, eval_every=30)
+                           scenario=scenario, eval_fn=eval_fn,
+                           eval_every=30)
 t_ring = t_to(ms)
 print(f"Ring-AllReduce : vtime-to-loss={t_ring:8.1f}  "
       f"({t_ring/t_rfast:.2f}x slower — pays the straggler every barrier)")
 
+# ... and the same scenario's event clock drives OSGP's pushes.
 _, ms = run_osgp(directed_ring(n), gfn, jnp.zeros((n, prob.p)), 5e-3, K,
-                 compute_time=compute, eval_fn=eval_fn, eval_every=300)
+                 scenario=scenario, eval_fn=eval_fn, eval_every=300)
 t_osgp = t_to(ms)
 print(f"OSGP           : vtime-to-loss={t_osgp:8.1f}  "
       f"({t_osgp/t_rfast:.2f}x)")

@@ -17,6 +17,10 @@ from .protocol import (  # noqa: F401
     tracking_step, mailbox_merge, IMPLS,
 )
 from .schedule import Schedule, generate_schedule, round_robin_schedule  # noqa: F401
+from .scenario import (  # noqa: F401
+    NetworkScenario, ScenarioTrace, GilbertElliott, EdgeChannels,
+    SCENARIOS, get_scenario,
+)
 from .simulator import (  # noqa: F401
     RFASTState, init_state, rfast_scan, run_rfast, tracked_mass,
 )

@@ -9,14 +9,20 @@ Asynchronous: AD-PSGD [22] (atomic pairwise averaging + stale gradients)
 and OSGP [23] (overlap stochastic gradient push: push-sum with mailbox
 accumulation and non-blocking sends).
 
-All baselines share the simulator's ``grad_fn(node, x, key)`` interface and
-a **virtual-time model** so that time-to-loss comparisons under stragglers
-are meaningful: synchronous rounds cost ``max_i compute_i`` (barrier),
-asynchronous events follow each node's own clock.
+All baselines share the simulator's ``grad_fn(node, x, key)`` interface
+and the repo-wide :class:`~repro.core.scenario.NetworkScenario` virtual
+clock, so time-to-loss comparisons against R-FAST are apples-to-apples:
+synchronous rounds pay the barrier (slowest node + retransmitted edges),
+asynchronous events follow the same per-node clocks, and every packet
+crosses the same lossy, delayed channels.  How each baseline maps onto
+the scenario model is documented in DESIGN.md §7.
+
+``eval_fn`` contract (uniform across baselines): ``eval_fn(x, t)`` where
+``x`` is the algorithm's iterate — ``(n, p)`` per-node models, or ``(p,)``
+for the single-model Ring-AllReduce — and ``t`` the virtual time.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
@@ -24,12 +30,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from .protocol import descent_step, tracking_step
+from .scenario import NetworkScenario
 from .topology import Topology
 
 GradFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 
 __all__ = [
-    "sync_round_times",
     "run_push_pull_sync",
     "run_ring_allreduce",
     "run_dpsgd",
@@ -40,22 +46,19 @@ __all__ = [
 ]
 
 
-# --------------------------------------------------------------------- #
-# virtual time for synchronous rounds
-# --------------------------------------------------------------------- #
-def sync_round_times(
-    compute_time: np.ndarray,
-    rounds: int,
-    *,
-    jitter: float = 0.2,
-    comm: float = 0.1,
-    seed: int = 0,
-) -> np.ndarray:
-    """Cumulative virtual time of synchronous rounds (barrier = max)."""
-    rng = np.random.default_rng(seed)
-    n = len(compute_time)
-    per = compute_time[None, :] * (1.0 + rng.uniform(-jitter, jitter, (rounds, n)))
-    return np.cumsum(per.max(axis=1) + comm)
+def _as_scenario(scenario, compute_time, jitter, loss_prob) -> NetworkScenario:
+    """Legacy-kwarg shim: a scenario wins; otherwise build one."""
+    if scenario is not None:
+        if compute_time is not None or jitter is not None or loss_prob is not None:
+            raise ValueError("pass either scenario= or the legacy "
+                             "compute_time/jitter/loss_prob kwargs, not both")
+        return scenario
+    return NetworkScenario(
+        compute_time=(1.0 if compute_time is None
+                      else tuple(np.asarray(compute_time, np.float64))),
+        jitter=0.2 if jitter is None else jitter,
+        loss=0.0 if loss_prob is None else loss_prob,
+    )
 
 
 def metropolis_weights(topo: Topology) -> np.ndarray:
@@ -81,8 +84,19 @@ def _vgrads(grad_fn: GradFn, x: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
 # --------------------------------------------------------------------- #
 # synchronous baselines
 # --------------------------------------------------------------------- #
+def _sync_times(scenario, topo_or_n, rounds: int, seed: int,
+                times: np.ndarray | None) -> np.ndarray:
+    if times is not None:
+        return np.asarray(times, np.float64)
+    sc = scenario if scenario is not None else NetworkScenario()
+    return sc.sync_round_times(topo_or_n, rounds, seed=seed)
+
+
 def _run_rounds(round_fn, carry, rounds: int, seed: int,
-                eval_every: int, eval_fn, times: np.ndarray):
+                eval_every: int, eval_fn, times: np.ndarray,
+                extract=lambda c: c):
+    """Drive ``rounds`` jitted rounds; ``eval_fn`` always receives the
+    *iterate* (``extract(carry)``), never the raw carry."""
     key = jax.random.PRNGKey(seed)
     metrics: list[dict] = []
     jfn = jax.jit(round_fn)
@@ -90,7 +104,7 @@ def _run_rounds(round_fn, carry, rounds: int, seed: int,
         key, sub = jax.random.split(key)
         carry = jfn(carry, sub)
         if eval_fn is not None and (t + 1) % eval_every == 0:
-            m = eval_fn(carry, float(times[t]))
+            m = eval_fn(extract(carry), float(times[t]))
             m["round"] = t + 1
             metrics.append(m)
     return carry, metrics
@@ -98,8 +112,8 @@ def _run_rounds(round_fn, carry, rounds: int, seed: int,
 
 def run_push_pull_sync(
     topo: Topology, grad_fn: GradFn, x0: jnp.ndarray, gamma: float,
-    rounds: int, *, seed: int = 0, eval_every: int = 10,
-    eval_fn=None, times: np.ndarray | None = None,
+    rounds: int, *, scenario: NetworkScenario | None = None, seed: int = 0,
+    eval_every: int = 10, eval_fn=None, times: np.ndarray | None = None,
 ):
     """Synchronous push-pull (eq. 2): the paper's S-AB-style ancestor.
 
@@ -116,8 +130,7 @@ def run_push_pull_sync(
     if x0.ndim == 1:
         x0 = jnp.tile(x0[None], (n, 1))
     g0 = _vgrads(grad_fn, x0, jax.random.PRNGKey(seed + 1))
-    if times is None:
-        times = np.arange(1, rounds + 1, dtype=np.float64)
+    times = _sync_times(scenario, topo, rounds, seed, times)
 
     def round_fn(carry, key):
         x, z, g = carry
@@ -127,7 +140,8 @@ def run_push_pull_sync(
         return (x_new, z_new, g_new)
 
     carry, metrics = _run_rounds(round_fn, (x0, g0, g0), rounds, seed,
-                                 eval_every, eval_fn, times)
+                                 eval_every, eval_fn, times,
+                                 extract=lambda c: c[0])
     return carry[0], metrics
 
 
@@ -140,15 +154,18 @@ def run_sab(topo: Topology, grad_fn: GradFn, x0, gamma, rounds, **kw):
 
 def run_ring_allreduce(
     n: int, grad_fn: GradFn, x0: jnp.ndarray, gamma: float, rounds: int,
-    *, seed: int = 0, eval_every: int = 10, eval_fn=None,
-    times: np.ndarray | None = None,
+    *, scenario: NetworkScenario | None = None, seed: int = 0,
+    eval_every: int = 10, eval_fn=None, times: np.ndarray | None = None,
 ):
-    """Ring-AllReduce SGD: exact gradient average per round (single model)."""
+    """Ring-AllReduce SGD: exact gradient average per round (single model).
+
+    The barrier clock runs over the n-edge directed ring (the reduce/
+    broadcast path), so stragglers, losses and crashes stall every round.
+    """
     x0 = jnp.asarray(x0, jnp.float32)
     if x0.ndim == 2:
         x0 = x0[0]
-    if times is None:
-        times = np.arange(1, rounds + 1, dtype=np.float64)
+    times = _sync_times(scenario, n, rounds, seed, times)
 
     def round_fn(x, key):
         g = _vgrads(grad_fn, jnp.tile(x[None], (n, 1)), key)
@@ -161,8 +178,8 @@ def run_ring_allreduce(
 
 def run_dpsgd(
     topo: Topology, grad_fn: GradFn, x0: jnp.ndarray, gamma: float,
-    rounds: int, *, seed: int = 0, eval_every: int = 10, eval_fn=None,
-    times: np.ndarray | None = None,
+    rounds: int, *, scenario: NetworkScenario | None = None, seed: int = 0,
+    eval_every: int = 10, eval_fn=None, times: np.ndarray | None = None,
 ):
     """D-PSGD [14]: x^{t+1} = W̄ x^t − γ ∇F(x^t), W̄ doubly stochastic."""
     n = topo.n
@@ -170,8 +187,7 @@ def run_dpsgd(
     x0 = jnp.asarray(x0, jnp.float32)
     if x0.ndim == 1:
         x0 = jnp.tile(x0[None], (n, 1))
-    if times is None:
-        times = np.arange(1, rounds + 1, dtype=np.float64)
+    times = _sync_times(scenario, topo, rounds, seed, times)
 
     def round_fn(x, key):
         g = _vgrads(grad_fn, x, key)
@@ -183,74 +199,108 @@ def run_dpsgd(
 
 
 # --------------------------------------------------------------------- #
-# asynchronous baselines (event-driven jax scans)
+# asynchronous baselines (event-driven jax scans on the scenario clock)
 # --------------------------------------------------------------------- #
-def _async_events(n: int, K: int, compute_time, jitter, seed):
-    rng = np.random.default_rng(seed)
-    compute_time = np.asarray(compute_time, np.float64)
-    clocks = rng.uniform(0, 1, n) * compute_time
-    agent = np.zeros(K, np.int32)
-    times = np.zeros(K)
-    for k in range(K):
-        a = int(np.argmin(clocks))
-        agent[k] = a
-        times[k] = clocks[a]
-        clocks[a] += compute_time[a] * (1 + rng.uniform(-jitter, jitter))
-    return agent, times
-
-
 def run_adpsgd(
     topo: Topology, grad_fn: GradFn, x0: jnp.ndarray, gamma: float, K: int,
-    *, compute_time=None, jitter: float = 0.2, staleness: int = 2,
-    loss_prob: float = 0.0, seed: int = 0, eval_every: int = 0, eval_fn=None,
+    *, scenario: NetworkScenario | None = None, compute_time=None,
+    jitter: float | None = None, staleness: int = 2,
+    loss_prob: float | None = None, seed: int = 0, eval_every: int = 0,
+    eval_fn=None,
 ):
     """AD-PSGD [22]: event-driven atomic pairwise averaging + stale grads.
 
-    Active node a picks a random (undirected) neighbour b, atomically
-    averages x_a, x_b, then applies a gradient computed at a's model from
-    ``staleness`` events ago.  Packet loss => the averaging step is skipped
-    (partial mixing), the descent still happens.
+    On the scenario clock: active node a picks a random (undirected)
+    neighbour b and atomically averages with the *freshest delivered*
+    copy of b's model (the schedule's per-edge payload stamps — latency
+    makes the mixed value stale, exactly like R-FAST's consensus reads);
+    b symmetrically averages with its delivered copy of a.  The exchange
+    is dropped whole when either direction's packet is lost or the
+    partner is inside a crash window.  The descent then applies a
+    gradient evaluated at a's model of ``staleness`` events ago.
     """
     n = topo.n
     rng = np.random.default_rng(seed + 7)
-    if compute_time is None:
-        compute_time = np.ones(n)
-    agent, times = _async_events(n, K, compute_time, jitter, seed)
+    scenario = _as_scenario(scenario, compute_time, jitter, loss_prob)
+    trace = scenario.realize(topo, K, seed=seed)
+    sched = trace.schedule
+    agent, times = sched.agent, sched.times
+
+    edges_w = topo.edges_W()
+    eidx = {ji: e for e, ji in enumerate(edges_w)}
     nbrs = {i: sorted(set(topo.in_neighbors_W(i) + topo.out_neighbors_W(i)))
             for i in range(n)}
-    partner = np.array([nbrs[a][rng.integers(len(nbrs[a]))] if nbrs[a] else a
-                        for a in agent], np.int32)
-    mixed = (rng.uniform(size=K) >= loss_prob)
+    # the ring must cover the partner-view reads too: the a->b stamp is
+    # only refreshed when b wakes, so between b's wakes its staleness is
+    # NOT bounded by sched.D (which measures active-agent reads only).
+    # Clamp those stamps to the scenario's Assumption-3(ii) bound D_max —
+    # the same forced delivery realize() applies at consumption — and
+    # size the ring to match.
+    d_max = scenario.resolved_D_max(n)
+    H = max(staleness + 1, d_max + 2)
+    ch = scenario.channels(len(edges_w), rng)
+
+    # host pass: partner choice, mixing gate (both channel directions +
+    # partner liveness), and the hist slots of the delivered payloads
+    partner = np.zeros(K, np.int32)
+    mixed = np.zeros(K, bool)
+    slot_ba = np.zeros(K, np.int32)     # b's state as delivered to a
+    slot_ab = np.zeros(K, np.int32)     # a's state as delivered to b
+    for k in range(K):
+        a = int(agent[k])
+        if not nbrs[a]:
+            partner[k] = a
+            continue
+        b = nbrs[a][rng.integers(len(nbrs[a]))]
+        partner[k] = b
+        e_ba, e_ab = eidx.get((b, a)), eidx.get((a, b))
+        ok = not scenario.in_failure(b, float(times[k]))
+        for e in (e_ba, e_ab):
+            if e is not None:
+                ok = ch.ok(e) and ok       # draw both; burst state advances
+        mixed[k] = ok
+        # stamp s = state after global event s-1, written at hist slot s%H;
+        # a missing direction falls back to the current snapshot (slot k%H)
+        s_ba = sched.stamp_v[k, e_ba] if e_ba is not None else k
+        s_ab = sched.stamp_v[k, e_ab] if e_ab is not None else k
+        s_ba = max(int(s_ba), k - d_max)
+        s_ab = max(int(s_ab), k - d_max)
+        assert k - min(s_ba, s_ab) <= H - 2   # ring slots never alias
+        slot_ba[k] = s_ba % H
+        slot_ab[k] = s_ab % H
 
     x0 = jnp.asarray(x0, jnp.float32)
     if x0.ndim == 1:
         x0 = jnp.tile(x0[None], (n, 1))
-    H = staleness + 1
     x_hist0 = jnp.tile(x0[None], (H, 1, 1))
 
     def step(carry, inp):
         x, x_hist, k = carry
-        a, b, mix, key = inp
-        avg = 0.5 * (x[a] + x[b])
-        x_a = jnp.where(mix, avg, x[a])
-        x_b = jnp.where(mix, avg, x[b])
-        g = grad_fn(a, x_hist[k % H, a], key)
+        a, b, s_ba, s_ab, mix, key = inp
+        xb_seen = x_hist[s_ba, b]              # b as delivered to a
+        xa_seen = x_hist[s_ab, a]              # a as delivered to b
+        x_a = jnp.where(mix, 0.5 * (x[a] + xb_seen), x[a])
+        x_b = jnp.where(mix, 0.5 * (x[b] + xa_seen), x[b])
+        # the state after m events lives at hist slot m % H (written at
+        # the end of event m-1), so `staleness` events ago = slot (k-s)%H;
+        # staleness 0 degenerates to the current state, as it should
+        g = grad_fn(a, x_hist[(k - staleness) % H, a], key)
         x = x.at[b].set(x_b).at[a].set(x_a - gamma * g)
         x_hist = x_hist.at[(k + 1) % H].set(x)
         return (x, x_hist, k + 1), None
 
     keys = jax.random.split(jax.random.PRNGKey(seed), K)
-    chunk = jax.jit(lambda c, a, b, m, ks: jax.lax.scan(
-        step, c, (a, b, m, ks))[0])
+    chunk = jax.jit(lambda c, *seq: jax.lax.scan(step, c, seq)[0])
     carry = (x0, x_hist0, jnp.zeros((), jnp.int32))
     metrics: list[dict] = []
     ee = eval_every if eval_every > 0 else K
     agent_j, partner_j = jnp.asarray(agent), jnp.asarray(partner)
+    sba_j, sab_j = jnp.asarray(slot_ba), jnp.asarray(slot_ab)
     mixed_j = jnp.asarray(mixed)
     for s in range(0, K, ee):
         e = min(K, s + ee)
-        carry = chunk(carry, agent_j[s:e], partner_j[s:e], mixed_j[s:e],
-                      keys[s:e])
+        carry = chunk(carry, agent_j[s:e], partner_j[s:e], sba_j[s:e],
+                      sab_j[s:e], mixed_j[s:e], keys[s:e])
         if eval_fn is not None:
             m = eval_fn(carry[0], float(times[e - 1]))
             m["k"] = e
@@ -260,61 +310,91 @@ def run_adpsgd(
 
 def run_osgp(
     topo: Topology, grad_fn: GradFn, x0: jnp.ndarray, gamma: float, K: int,
-    *, compute_time=None, jitter: float = 0.2, loss_prob: float = 0.0,
+    *, scenario: NetworkScenario | None = None, compute_time=None,
+    jitter: float | None = None, loss_prob: float | None = None,
     seed: int = 0, eval_every: int = 0, eval_fn=None,
 ):
     """OSGP [23]: overlap stochastic gradient push (async push-sum).
 
-    Node state (x_i, w_i).  On wake: consume mailbox mass, de-bias
-    ẑ = x/w, descend, then push column-stochastic shares to out-neighbour
-    mailboxes (non-blocking).  Lost packets lose mass — the robustness gap
-    R-FAST's running sums close.
+    Node state (x_i, w_i).  On wake: consume the arrived mailbox mass,
+    de-bias ẑ = x/w, descend, then push column-stochastic shares to
+    out-neighbour mailboxes (non-blocking).  On the scenario clock the
+    mailboxes are per-edge *cumulative* streams read at the schedule's
+    payload stamps — latency delays mass, and a lost packet's share is
+    excluded from the stream forever (push-sum has no retransmission:
+    the mass is gone — exactly the robustness gap R-FAST's running sums
+    close; R-FAST's ρ streams are cumulative at the *algorithm* level,
+    so a later arrival re-delivers everything).
     """
     n = topo.n
-    if compute_time is None:
-        compute_time = np.ones(n)
-    agent, times = _async_events(n, K, compute_time, jitter, seed)
-    A = jnp.asarray(topo.A, jnp.float32)           # column-stochastic
-    rng = np.random.default_rng(seed + 13)
-    # per-event, per-row loss mask for the pushes of the active node
-    lost = (rng.uniform(size=(K, n)) < loss_prob)
+    scenario = _as_scenario(scenario, compute_time, jitter, loss_prob)
+    trace = scenario.realize(topo, K, seed=seed)
+    sched = trace.schedule
+    agent, times = sched.agent, sched.times
+
+    edges_a = topo.edges_A()
+    E1 = max(1, len(edges_a))
+    H = sched.D + 2
+    src = np.zeros(E1, np.int32)
+    dst = np.full(E1, -1, np.int32)      # -1 on pads: matches no agent
+    wt = np.zeros(E1, np.float32)
+    for e, (j, i) in enumerate(edges_a):
+        src[e], dst[e], wt[e] = j, i, topo.A[i, j]
+    src[len(edges_a):] = -1
+    a_diag = jnp.asarray(np.diag(topo.A), jnp.float32)
+    src_j, dst_j, wt_j = jnp.asarray(src), jnp.asarray(dst), jnp.asarray(wt)
+    rslot = jnp.asarray(sched.stamp_rho % H, jnp.int32)        # (K, E1)
+    send_ok = jnp.asarray(trace.send_ok_a, jnp.float32)        # (K, E1)
 
     x0 = jnp.asarray(x0, jnp.float32)
     if x0.ndim == 1:
         x0 = jnp.tile(x0[None], (n, 1))
+    p = x0.shape[1]
 
     def step(carry, inp):
-        x, w, mail_x, mail_w = carry
-        a, drop, key = inp
-        # consume mailbox
-        x_a = x[a] + mail_x[a]
-        w_a = w[a] + mail_w[a]
-        mail_x = mail_x.at[a].set(0.0)
-        mail_w = mail_w.at[a].set(0.0)
+        x, w, cum_x, cum_w, cons_x, cons_w, hist_x, hist_w, k = carry
+        a, rs, ok, key = inp
+        # consume: cumulative stream at the delivered stamp, minus what
+        # this receiver already took (the receiver-side ρ̃ idiom)
+        vals_x = hist_x[rs, jnp.arange(E1)]                    # (E1, p)
+        vals_w = hist_w[rs, jnp.arange(E1)]                    # (E1,)
+        m_in = (dst_j == a)
+        mx = jnp.sum(jnp.where(m_in[:, None], vals_x - cons_x, 0.0), axis=0)
+        mw = jnp.sum(jnp.where(m_in, vals_w - cons_w, 0.0))
+        cons_x = jnp.where(m_in[:, None], vals_x, cons_x)
+        cons_w = jnp.where(m_in, vals_w, cons_w)
+        x_a = x[a] + mx
+        w_a = w[a] + mw
         # de-biased gradient step
         g = grad_fn(a, x_a / jnp.maximum(w_a, 1e-8), key)
         x_a = x_a - gamma * w_a * g
-        # push shares
-        col = A[:, a]                                 # (n,)
-        keep = col[a]
-        others = col.at[a].set(0.0)
-        ok = (~drop).astype(x_a.dtype)                # (n,)
-        mail_x = mail_x + (others * ok)[:, None] * x_a[None, :]
-        mail_w = mail_w + others * ok * w_a
-        x = x.at[a].set(keep * x_a)
-        w = w.at[a].set(keep * w_a)
-        return (x, w, mail_x, mail_w), None
+        # push shares: delivered packets extend the stream, lost ones
+        # never enter it (their mass is gone)
+        m_out = (src_j == a).astype(x.dtype) * ok * wt_j       # (E1,)
+        cum_x = cum_x + m_out[:, None] * x_a[None, :]
+        cum_w = cum_w + m_out * w_a
+        x = x.at[a].set(a_diag[a] * x_a)
+        w = w.at[a].set(a_diag[a] * w_a)
+        hist_x = hist_x.at[(k + 1) % H].set(cum_x)
+        hist_w = hist_w.at[(k + 1) % H].set(cum_w)
+        return (x, w, cum_x, cum_w, cons_x, cons_w, hist_x, hist_w,
+                k + 1), None
 
     keys = jax.random.split(jax.random.PRNGKey(seed), K)
-    chunk = jax.jit(lambda c, a, d, ks: jax.lax.scan(step, c, (a, d, ks))[0])
-    carry = (x0, jnp.ones(n, jnp.float32), jnp.zeros_like(x0),
-             jnp.zeros(n, jnp.float32))
+    chunk = jax.jit(lambda c, *seq: jax.lax.scan(step, c, seq)[0])
+    carry = (x0, jnp.ones(n, jnp.float32),
+             jnp.zeros((E1, p), jnp.float32), jnp.zeros(E1, jnp.float32),
+             jnp.zeros((E1, p), jnp.float32), jnp.zeros(E1, jnp.float32),
+             jnp.zeros((H, E1, p), jnp.float32),
+             jnp.zeros((H, E1), jnp.float32),
+             jnp.zeros((), jnp.int32))
     metrics: list[dict] = []
     ee = eval_every if eval_every > 0 else K
-    agent_j, lost_j = jnp.asarray(agent), jnp.asarray(lost)
+    agent_j = jnp.asarray(agent)
     for s in range(0, K, ee):
         e = min(K, s + ee)
-        carry = chunk(carry, agent_j[s:e], lost_j[s:e], keys[s:e])
+        carry = chunk(carry, agent_j[s:e], rslot[s:e], send_ok[s:e],
+                      keys[s:e])
         if eval_fn is not None:
             x, w = carry[0], carry[1]
             xd = x / jnp.maximum(w[:, None], 1e-8)

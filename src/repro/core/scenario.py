@@ -1,0 +1,421 @@
+"""One virtual-time scenario engine for R-FAST and every baseline.
+
+The paper's headline claim (Fig. 5-6) is a *time-to-loss* claim, so every
+cross-algorithm comparison is only meaningful when all algorithms
+experience the same delay/failure model (Lian et al. 2018; Assran et al.
+2020).  This module owns that model: a declarative
+:class:`NetworkScenario` plus the single event-clock core that is the
+only source of virtual time in the repo.
+
+Two clocks, one model:
+
+* :meth:`NetworkScenario.realize` — the asynchronous event clock.  Every
+  node runs its own virtual clock (per-node compute rates, multiplicative
+  jitter, *time-varying* straggler windows, crash/recovery windows);
+  every packet traverses a lossy, delayed channel (per-edge latency
+  means, Bernoulli or bursty Gilbert-Elliott loss).  The result is a
+  :class:`ScenarioTrace`: the realized :class:`~repro.core.schedule.Schedule`
+  (activations + per-edge payload stamps, consumed by ``run_rfast`` and
+  the async baselines) plus the per-event send outcomes (consumed by
+  OSGP's mailboxes, which — unlike R-FAST's running sums — lose the mass
+  of dropped packets).
+* :meth:`NetworkScenario.sync_round_times` — the synchronous barrier
+  clock, built from the *same* primitives: a round ends when the slowest
+  node (stragglers, crash stalls included) finishes its compute AND every
+  edge has delivered, with lost packets retransmitted.
+
+The default-parameter ``realize`` path consumes its RNG stream in exactly
+the order the pre-refactor ``schedule.generate_schedule`` did, so the
+compatibility shim reproduces historical schedules bit-for-bit (pinned by
+a golden test).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from .schedule import Schedule, _realized_T
+from .topology import Topology
+
+__all__ = [
+    "GilbertElliott", "EdgeChannels", "NetworkScenario", "ScenarioTrace",
+    "SCENARIOS", "get_scenario",
+]
+
+
+# --------------------------------------------------------------------- #
+# loss channels
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class GilbertElliott:
+    """Bursty two-state loss channel (per packet: state step, then loss).
+
+    ``p_gb``/``p_bg`` are the good->bad / bad->good transition
+    probabilities per packet; ``loss_good``/``loss_bad`` the loss
+    probability within each state.  Stationary loss rate is
+    ``pi_bad * loss_bad + (1 - pi_bad) * loss_good`` with
+    ``pi_bad = p_gb / (p_gb + p_bg)``; mean burst length ``1 / p_bg``.
+    """
+
+    p_gb: float
+    p_bg: float
+    loss_good: float = 0.0
+    loss_bad: float = 1.0
+
+
+class EdgeChannels:
+    """Per-edge loss processes sharing one RNG stream.
+
+    Bernoulli mode draws exactly one uniform per packet (the pre-refactor
+    draw order, needed for the ``generate_schedule`` golden test);
+    Gilbert-Elliott mode keeps an independent good/bad state per edge and
+    draws two uniforms per packet (state transition, then loss).
+    """
+
+    def __init__(self, n_edges: int, loss: float,
+                 ge: GilbertElliott | None, rng: np.random.Generator):
+        self.loss = float(loss)
+        self.ge = ge
+        self.rng = rng
+        self.bad = np.zeros(n_edges, dtype=bool)   # GE state (start good)
+
+    def ok(self, e: int) -> bool:
+        """One packet on edge ``e``: True = delivered, False = lost."""
+        if self.ge is None:
+            return bool(self.rng.uniform() >= self.loss)
+        flip = self.ge.p_bg if self.bad[e] else self.ge.p_gb
+        if self.rng.uniform() < flip:
+            self.bad[e] = not self.bad[e]
+        p = self.ge.loss_bad if self.bad[e] else self.ge.loss_good
+        return bool(self.rng.uniform() >= p)
+
+
+# --------------------------------------------------------------------- #
+# the scenario
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ScenarioTrace:
+    """One realization of a scenario on a topology: the Schedule all
+    algorithms consume, plus per-event send outcomes (True = the active
+    agent's packet on that out-edge was delivered; rows of inactive
+    agents are False)."""
+
+    schedule: Schedule
+    send_ok_w: np.ndarray   # (K, max(1, E_W)) bool
+    send_ok_a: np.ndarray   # (K, max(1, E_A)) bool
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkScenario:
+    """Declarative network/compute model shared by every algorithm.
+
+    Args:
+      compute_time: per-node mean compute interval — scalar or length-n
+        sequence (straggler = large value).
+      jitter: multiplicative uniform jitter on each compute interval.
+      latency: mean packet latency (exponential), in compute-time units.
+      edge_latency: per-edge overrides of ``latency``, keyed ``(src, dst)``.
+      loss: per-packet Bernoulli loss probability.
+      gilbert_elliott: when set, replaces Bernoulli loss with a bursty
+        two-state channel per edge.
+      stragglers: *time-varying* slowdowns ``(node, t0, t1, factor)`` —
+        inside ``[t0, t1)`` the node's compute interval is multiplied by
+        ``factor`` (factors of overlapping windows compose).
+      failures: crash/recovery windows ``(node, t0, t1)`` — the node does
+        not wake inside the window; bounded downtime keeps Assumption 3
+        satisfied with a larger realized T.
+      D_max: hard staleness bound (Assumption 3ii); default ``4n + 16``.
+      name: optional label (used by benchmark rows).
+    """
+
+    compute_time: float | Sequence[float] = 1.0
+    jitter: float = 0.2
+    latency: float = 0.1
+    edge_latency: Mapping[tuple[int, int], float] | None = None
+    loss: float = 0.0
+    gilbert_elliott: GilbertElliott | None = None
+    stragglers: tuple[tuple[int, float, float, float], ...] = ()
+    failures: tuple[tuple[int, float, float], ...] = ()
+    D_max: int | None = None
+    name: str = ""
+
+    # -- per-node / per-edge resolution ------------------------------- #
+    def node_compute(self, n: int) -> np.ndarray:
+        base = np.asarray(self.compute_time, dtype=np.float64)
+        if base.ndim == 0:
+            base = np.full(n, float(base))
+        if base.shape != (n,):
+            raise ValueError(
+                f"compute_time must be scalar or length {n}, got "
+                f"shape {base.shape}")
+        return base
+
+    def edge_latency_of(self, edges: list[tuple[int, int]]) -> np.ndarray:
+        lat = np.full(max(1, len(edges)), float(self.latency))
+        for e, (j, i) in enumerate(edges):
+            if self.edge_latency and (j, i) in self.edge_latency:
+                lat[e] = float(self.edge_latency[(j, i)])
+        return lat
+
+    def slow_factor(self, node: int, t: float) -> float:
+        f = 1.0
+        for (i, t0, t1, factor) in self.stragglers:
+            if i == node and t0 <= t < t1:
+                f *= factor
+        return f
+
+    def in_failure(self, node: int, t: float) -> bool:
+        return any(i == node and t0 <= t < t1 for (i, t0, t1) in self.failures)
+
+    def channels(self, n_edges: int, rng: np.random.Generator) -> EdgeChannels:
+        return EdgeChannels(n_edges, self.loss, self.gilbert_elliott, rng)
+
+    def resolved_D_max(self, n: int) -> int:
+        """The Assumption-3(ii) staleness bound actually enforced —
+        the single source for every consumer (realize's forced delivery,
+        AD-PSGD's partner-read clamp/ring sizing)."""
+        return self.D_max if self.D_max is not None else 4 * n + 16
+
+    # ----------------------------------------------------------------- #
+    # the asynchronous event clock (the only one in the repo)
+    # ----------------------------------------------------------------- #
+    def realize(self, topo: Topology, K: int, *, seed: int = 0) -> ScenarioTrace:
+        """Simulate virtual clocks + network over ``topo`` for ``K`` events.
+
+        Packets carry the sender's post-update stamp; a receiver always
+        consumes the largest stamp delivered so far (the paper's ``tau``
+        semantics), so per-edge stamps are monotone.  ``D_max`` enforces
+        Assumption 3(ii): when loss/latency would push staleness past it,
+        delivery is forced (the model excludes infinitely persistent
+        loss).  With default parameters the RNG draw order is identical
+        to the pre-refactor ``generate_schedule`` (golden-tested).
+        """
+        rng = np.random.default_rng(seed)
+        n = topo.n
+        base = self.node_compute(n)
+        D_max = self.resolved_D_max(n)
+
+        edges_w = topo.edges_W()
+        edges_a = topo.edges_A()
+        out_w: dict[int, list[int]] = {i: [] for i in range(n)}
+        out_a: dict[int, list[int]] = {i: [] for i in range(n)}
+        in_w: dict[int, list[int]] = {i: [] for i in range(n)}
+        in_a: dict[int, list[int]] = {i: [] for i in range(n)}
+        for e, (j, i) in enumerate(edges_w):
+            out_w[j].append(e)
+            in_w[i].append(e)
+        for e, (j, i) in enumerate(edges_a):
+            out_a[j].append(e)
+            in_a[i].append(e)
+        lat_w = self.edge_latency_of(edges_w)
+        lat_a = self.edge_latency_of(edges_a)
+
+        # per-edge arrival queues: (arrival_time, stamp); consumed in
+        # stamp order (non-FIFO arrival allowed — max stamp arrived wins)
+        arrivals_w: list[list[tuple[float, int]]] = [[] for _ in edges_w]
+        arrivals_a: list[list[tuple[float, int]]] = [[] for _ in edges_a]
+        best_w = np.zeros(len(edges_w), dtype=np.int64)
+        best_a = np.zeros(len(edges_a), dtype=np.int64)
+
+        clocks = rng.uniform(0.0, 1.0, n) * base
+        # crash windows: push a node's first wake-up past the recovery time
+        for (fn_, t0_, t1_) in self.failures:
+            if clocks[fn_] >= t0_:
+                clocks[fn_] = max(clocks[fn_], t1_)
+        ch_w = self.channels(len(edges_w), rng)
+        ch_a = self.channels(len(edges_a), rng)
+
+        agent = np.zeros(K, dtype=np.int32)
+        stamp_v = np.zeros((K, max(1, len(edges_w))), dtype=np.int32)
+        stamp_rho = np.zeros((K, max(1, len(edges_a))), dtype=np.int32)
+        times = np.zeros(K, dtype=np.float64)
+        send_ok_w = np.zeros((K, max(1, len(edges_w))), dtype=bool)
+        send_ok_a = np.zeros((K, max(1, len(edges_a))), dtype=bool)
+        max_delay = 0
+
+        for k in range(K):
+            a = int(np.argmin(clocks))
+            now = float(clocks[a])
+            agent[k] = a
+            times[k] = now
+
+            # consume: advance best stamp per in-edge from arrived packets
+            for e in in_w[a]:
+                q = arrivals_w[e]
+                keep = []
+                for (t_arr, s) in q:
+                    if t_arr <= now:
+                        if s > best_w[e]:
+                            best_w[e] = s
+                    else:
+                        keep.append((t_arr, s))
+                arrivals_w[e][:] = keep
+                if k - best_w[e] > D_max:         # Assumption 3(ii)
+                    best_w[e] = k - D_max
+            for e in in_a[a]:
+                q = arrivals_a[e]
+                keep = []
+                for (t_arr, s) in q:
+                    if t_arr <= now:
+                        if s > best_a[e]:
+                            best_a[e] = s
+                    else:
+                        keep.append((t_arr, s))
+                arrivals_a[e][:] = keep
+                if k - best_a[e] > D_max:
+                    best_a[e] = k - D_max
+
+            stamp_v[k] = best_w if len(edges_w) else 0
+            stamp_rho[k] = best_a if len(edges_a) else 0
+            for e in in_w[a]:
+                max_delay = max(max_delay, k - int(best_w[e]))
+            for e in in_a[a]:
+                max_delay = max(max_delay, k - int(best_a[e]))
+
+            # send: node a finishes local iteration k, emits stamp k+1
+            for e in out_w[a]:
+                if ch_w.ok(e):
+                    send_ok_w[k, e] = True
+                    arrivals_w[e].append(
+                        (now + rng.exponential(lat_w[e]), k + 1))
+            for e in out_a[a]:
+                if ch_a.ok(e):
+                    send_ok_a[k, e] = True
+                    arrivals_a[e].append(
+                        (now + rng.exponential(lat_a[e]), k + 1))
+
+            step = base[a] * self.slow_factor(a, now)
+            clocks[a] = now + step * (1.0 + rng.uniform(-self.jitter,
+                                                        self.jitter))
+            for (fn_, t0_, t1_) in self.failures:
+                if fn_ == a and t0_ <= clocks[a] < t1_:
+                    clocks[a] = t1_       # crash: sleep through the window
+
+        schedule = Schedule(
+            agent=agent,
+            stamp_v=stamp_v,
+            stamp_rho=stamp_rho,
+            times=times,
+            D=int(max(1, max_delay)),
+            T=_realized_T(agent, n),
+        )
+        return ScenarioTrace(schedule=schedule, send_ok_w=send_ok_w,
+                             send_ok_a=send_ok_a)
+
+    # ----------------------------------------------------------------- #
+    # the synchronous barrier clock (same primitives, same model)
+    # ----------------------------------------------------------------- #
+    def sync_round_times(self, topo: Topology | int, rounds: int, *,
+                         seed: int = 0, max_retries: int = 50) -> np.ndarray:
+        """Cumulative virtual completion time of ``rounds`` barrier rounds.
+
+        Round ``r`` starting at barrier time ``t`` ends at::
+
+            max_i compute_i(t)  +  max_e retransmit_latency_e
+
+        where ``compute_i`` draws from node ``i``'s profile (straggler
+        windows apply, crash windows stall the barrier until recovery —
+        the synchronous cost of a failure) and each edge redraws its
+        latency until the loss channel delivers (at most ``max_retries``
+        tries; bursty channels cannot stall a barrier forever).
+
+        ``topo`` may be an ``int`` node count (e.g. Ring-AllReduce): the
+        communication graph is then taken as the n-edge directed ring.
+        """
+        rng = np.random.default_rng(seed)
+        if isinstance(topo, int):
+            n = topo
+            edges = [(i, (i + 1) % n) for i in range(n)]
+        else:
+            n = topo.n
+            edges = sorted(set(topo.edges_W()) | set(topo.edges_A()))
+        base = self.node_compute(n)
+        lat = self.edge_latency_of(edges)
+        ch = self.channels(len(edges), rng)
+
+        times = np.zeros(rounds, dtype=np.float64)
+        t = 0.0
+        for r in range(rounds):
+            finish = t
+            for i in range(n):
+                step = base[i] * self.slow_factor(i, t)
+                f_i = t + step * (1.0 + rng.uniform(-self.jitter, self.jitter))
+                # a crash window overlapping the work stalls the barrier
+                for (fn_, t0_, t1_) in self.failures:
+                    if fn_ == i and t0_ < f_i and t1_ > t:
+                        f_i = max(f_i, t1_)
+                finish = max(finish, f_i)
+            comm = 0.0
+            for e in range(len(edges)):
+                t_e = rng.exponential(lat[e])
+                tries = 1
+                while not ch.ok(e) and tries < max_retries:
+                    t_e += rng.exponential(lat[e])
+                    tries += 1
+                comm = max(comm, t_e)
+            t = finish + comm
+            times[r] = t
+        return times
+
+
+# --------------------------------------------------------------------- #
+# named scenarios (the benchmark suite's shared vocabulary)
+# --------------------------------------------------------------------- #
+def _uniform(n: int) -> NetworkScenario:
+    return NetworkScenario(latency=0.3, name="uniform")
+
+
+def _straggler(n: int) -> NetworkScenario:
+    compute = np.ones(n)
+    compute[-1] = 4.0
+    return NetworkScenario(compute_time=tuple(compute), latency=0.3,
+                           name="straggler")
+
+
+def _flaky_straggler(n: int) -> NetworkScenario:
+    """Time-varying: the last node runs 6x slow in two windows."""
+    s = n - 1
+    return NetworkScenario(
+        latency=0.3,
+        stragglers=((s, 100.0, 300.0, 6.0), (s, 600.0, 800.0, 6.0)),
+        name="flaky_straggler")
+
+
+def _packet_loss(n: int) -> NetworkScenario:
+    return NetworkScenario(latency=0.3, loss=0.2, name="packet_loss")
+
+
+def _bursty_loss(n: int) -> NetworkScenario:
+    # ~20% stationary loss in bursts of mean length 10 packets
+    return NetworkScenario(
+        latency=0.3,
+        gilbert_elliott=GilbertElliott(p_gb=0.025, p_bg=0.1),
+        name="bursty_loss")
+
+
+def _crash_recovery(n: int) -> NetworkScenario:
+    """Two nodes crash (disjoint windows) and recover."""
+    return NetworkScenario(
+        latency=0.3,
+        failures=((n - 1, 150.0, 280.0), (max(0, n // 2), 450.0, 560.0)),
+        name="crash_recovery")
+
+
+SCENARIOS: dict[str, Callable[[int], NetworkScenario]] = {
+    "uniform": _uniform,
+    "straggler": _straggler,
+    "flaky_straggler": _flaky_straggler,
+    "packet_loss": _packet_loss,
+    "bursty_loss": _bursty_loss,
+    "crash_recovery": _crash_recovery,
+}
+
+
+def get_scenario(name: str, n: int) -> NetworkScenario:
+    """Named scenario for an ``n``-node deployment (see :data:`SCENARIOS`)."""
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"have {sorted(SCENARIOS)}")
+    return SCENARIOS[name](n)

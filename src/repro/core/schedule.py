@@ -7,15 +7,17 @@ The global view (Algorithm 2) consumes, at every global iteration ``k``:
   ``v_j`` payload available to the receiver (``k - d_{v,j}^k`` in the paper),
 * ``stamp_rho[k, e]`` — ditto for ρ payloads on A-edges.
 
-Stamps are produced by an explicit network simulation with virtual clocks:
-every node has a compute-time distribution (stragglers = slower clocks),
-every edge has a latency distribution and a Bernoulli loss probability.
+Stamps are produced by the repo-wide virtual-time engine
+(:mod:`repro.core.scenario`): every node has a compute-time profile
+(stragglers = slower clocks, possibly time-varying), every edge a latency
+distribution and a loss channel (Bernoulli or bursty Gilbert-Elliott).
 Packets carry the sender's post-update stamp; the receiver always consumes
 the *largest stamp delivered so far* (the paper's ``τ`` semantics), which
 makes per-edge stamps monotone.  A hard bound ``D_max`` enforces
 Assumption 3(ii): if loss/latency would push staleness beyond ``D_max``
 iterations, delivery is forced (the paper's model also excludes infinitely
-persistent loss).
+persistent loss).  :func:`generate_schedule` here is the compatibility
+shim over that engine; the baselines consume the same engine directly.
 """
 from __future__ import annotations
 
@@ -69,6 +71,7 @@ def generate_schedule(
     topo: Topology,
     K: int,
     *,
+    scenario=None,
     compute_time: np.ndarray | list[float] | None = None,
     jitter: float = 0.2,
     latency: float = 0.1,
@@ -77,9 +80,19 @@ def generate_schedule(
     seed: int = 0,
     failures: list[tuple[int, float, float]] | None = None,
 ) -> Schedule:
-    """Simulate virtual clocks + network to produce a Schedule.
+    """Realize an asynchronous Schedule under a network scenario.
+
+    The event clock itself lives in
+    :meth:`repro.core.scenario.NetworkScenario.realize` — the single
+    source of virtual time shared with every baseline.  This wrapper is
+    a thin compatibility shim: the historical kwargs build an equivalent
+    :class:`~repro.core.scenario.NetworkScenario`, and the RNG draw
+    order is bit-identical to the pre-refactor implementation (pinned by
+    the golden test in ``tests/test_scenario.py``).
 
     Args:
+      scenario: a :class:`~repro.core.scenario.NetworkScenario`; when
+        given, all other model kwargs must stay at their defaults.
       compute_time: per-node mean compute time (straggler = large value);
         defaults to all-ones.
       jitter: multiplicative uniform jitter on each compute interval.
@@ -91,106 +104,23 @@ def generate_schedule(
         downtime keeps Assumption 3 satisfied with a larger realized T;
         the ρ running sums deliver the accumulated mass on recovery.
     """
-    rng = np.random.default_rng(seed)
-    n = topo.n
-    if compute_time is None:
-        compute_time = np.ones(n)
-    compute_time = np.asarray(compute_time, dtype=np.float64)
-    if D_max is None:
-        D_max = 4 * n + 16
-
-    edges_w = topo.edges_W()
-    edges_a = topo.edges_A()
-    out_w = {i: [] for i in range(n)}
-    out_a = {i: [] for i in range(n)}
-    in_w = {i: [] for i in range(n)}
-    in_a = {i: [] for i in range(n)}
-    for e, (j, i) in enumerate(edges_w):
-        out_w[j].append(e)
-        in_w[i].append(e)
-    for e, (j, i) in enumerate(edges_a):
-        out_a[j].append(e)
-        in_a[i].append(e)
-
-    # per-edge arrival queues: list of (arrival_time, stamp); consumed in
-    # stamp order (non-FIFO arrival is allowed — we take max stamp arrived).
-    arrivals_w: list[list[tuple[float, int]]] = [[] for _ in edges_w]
-    arrivals_a: list[list[tuple[float, int]]] = [[] for _ in edges_a]
-    best_w = np.zeros(len(edges_w), dtype=np.int64)   # largest stamp delivered
-    best_a = np.zeros(len(edges_a), dtype=np.int64)
-
-    clocks = rng.uniform(0.0, 1.0, n) * compute_time
-    # crash windows: push the node's next wake-up past the recovery time
-    for (fn_, t0_, t1_) in (failures or []):
-        if clocks[fn_] >= t0_:
-            clocks[fn_] = max(clocks[fn_], t1_)
-    agent = np.zeros(K, dtype=np.int32)
-    stamp_v = np.zeros((K, max(1, len(edges_w))), dtype=np.int32)
-    stamp_rho = np.zeros((K, max(1, len(edges_a))), dtype=np.int32)
-    times = np.zeros(K, dtype=np.float64)
-    max_delay = 0
-
-    for k in range(K):
-        a = int(np.argmin(clocks))
-        now = float(clocks[a])
-        agent[k] = a
-        times[k] = now
-
-        # -- consume: advance best stamp per in-edge from arrived packets --
-        for e in in_w[a]:
-            q = arrivals_w[e]
-            keep = []
-            for (t_arr, s) in q:
-                if t_arr <= now:
-                    if s > best_w[e]:
-                        best_w[e] = s
-                else:
-                    keep.append((t_arr, s))
-            arrivals_w[e][:] = keep
-            # Assumption 3(ii) hard bound
-            if k - best_w[e] > D_max:
-                best_w[e] = k - D_max
-        for e in in_a[a]:
-            q = arrivals_a[e]
-            keep = []
-            for (t_arr, s) in q:
-                if t_arr <= now:
-                    if s > best_a[e]:
-                        best_a[e] = s
-                else:
-                    keep.append((t_arr, s))
-            arrivals_a[e][:] = keep
-            if k - best_a[e] > D_max:
-                best_a[e] = k - D_max
-
-        stamp_v[k] = best_w if len(edges_w) else 0
-        stamp_rho[k] = best_a if len(edges_a) else 0
-        for e in in_w[a]:
-            max_delay = max(max_delay, k - int(best_w[e]))
-        for e in in_a[a]:
-            max_delay = max(max_delay, k - int(best_a[e]))
-
-        # -- send: node a finishes local iteration k, emits stamp k+1 ------
-        for e in out_w[a] + []:
-            if rng.uniform() >= loss_prob:
-                arrivals_w[e].append((now + rng.exponential(latency), k + 1))
-        for e in out_a[a]:
-            if rng.uniform() >= loss_prob:
-                arrivals_a[e].append((now + rng.exponential(latency), k + 1))
-
-        clocks[a] = now + compute_time[a] * (1.0 + rng.uniform(-jitter, jitter))
-        for (fn_, t0_, t1_) in (failures or []):
-            if fn_ == a and t0_ <= clocks[a] < t1_:
-                clocks[a] = t1_     # crash: sleep through the window
-
-    return Schedule(
-        agent=agent,
-        stamp_v=stamp_v,
-        stamp_rho=stamp_rho,
-        times=times,
-        D=int(max(1, max_delay)),
-        T=_realized_T(agent, n),
-    )
+    from .scenario import NetworkScenario   # import here: scenario.py
+    # imports Schedule from this module
+    if scenario is None:
+        scenario = NetworkScenario(
+            compute_time=(1.0 if compute_time is None
+                          else tuple(np.asarray(compute_time, np.float64))),
+            jitter=jitter,
+            latency=latency,
+            loss=loss_prob,
+            failures=tuple(failures or ()),
+            D_max=D_max,
+        )
+    elif (compute_time is not None or failures is not None
+          or (jitter, latency, loss_prob, D_max) != (0.2, 0.1, 0.0, None)):
+        raise ValueError("pass either scenario= or the legacy kwargs, "
+                         "not both")
+    return scenario.realize(topo, K, seed=seed).schedule
 
 
 # --------------------------------------------------------------------- #

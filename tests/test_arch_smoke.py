@@ -11,6 +11,8 @@ from repro.configs import ARCHS, get_config
 from repro.models import (decode_step, forward, init_cache, init_params,
                           loss_fn, prefill)
 
+pytestmark = pytest.mark.slow   # model-zoo e2e smoke: full tier only
+
 B, S = 2, 16
 
 

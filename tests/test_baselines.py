@@ -3,10 +3,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import directed_ring, undirected_ring
+from repro.core import NetworkScenario, directed_ring, undirected_ring
 from repro.core.baselines import (
-    metropolis_weights, run_adpsgd, run_dpsgd, run_osgp, run_ring_allreduce,
-    run_sab,
+    metropolis_weights, run_adpsgd, run_dpsgd, run_osgp, run_push_pull_sync,
+    run_ring_allreduce, run_sab,
 )
 from tests.test_simulator import quad_grad_fn
 
@@ -71,6 +71,132 @@ def test_osgp_converges_no_loss():
     assert err < 0.3, err
 
 
+@pytest.mark.parametrize("staleness", [0, 1, 3])
+def test_adpsgd_staleness_semantics(staleness):
+    """Regression pin for the staleness bug: the gradient at event k must
+    be evaluated at the active node's row of the global state as of
+    ``staleness`` events ago.  Mixing is disabled (loss=1) and the
+    dynamics linearized (g = x) so a host-side reference reproduces the
+    scan exactly."""
+    n, p, K, gamma = 3, 4, 200, 0.05
+    topo = undirected_ring(n)
+    sc = NetworkScenario(loss=1.0)
+
+    def gfn(i, x, key):
+        return x
+
+    rng = np.random.default_rng(0)
+    x0 = rng.normal(0, 1, (n, p)).astype(np.float32)
+    x, _ = run_adpsgd(topo, gfn, jnp.asarray(x0), gamma, K,
+                      scenario=sc, staleness=staleness, seed=0)
+
+    # reference: hist[j] = global state after j events
+    sched = sc.realize(topo, K, seed=0).schedule
+    xr = x0.copy()
+    hist = [x0.copy()]
+    for k, a in enumerate(sched.agent):
+        src = hist[max(0, k - staleness)]      # state `staleness` events ago
+        xr = xr.copy()
+        xr[a] = xr[a] - gamma * src[a]
+        hist.append(xr)
+    np.testing.assert_allclose(np.asarray(x), xr, rtol=1e-5, atol=1e-6)
+
+
+def test_adpsgd_staleness_parameter_matters():
+    """The staleness knob must change the trajectory (it used to be
+    silently ignored)."""
+    n, p, K = 3, 4, 150
+    topo = undirected_ring(n)
+    sc = NetworkScenario(loss=1.0)
+    gfn = lambda i, x, key: x  # noqa: E731
+    x0 = jnp.asarray(np.random.default_rng(1).normal(0, 1, (n, p)),
+                     jnp.float32)
+    x1, _ = run_adpsgd(topo, gfn, x0, 0.05, K, scenario=sc, staleness=1)
+    x3, _ = run_adpsgd(topo, gfn, x0, 0.05, K, scenario=sc, staleness=3)
+    assert not np.allclose(np.asarray(x1), np.asarray(x3))
+
+
+@pytest.mark.parametrize("scenario_name", ["crash_recovery", "straggler"])
+def test_adpsgd_partner_reads_never_alias_history(scenario_name):
+    """Regression: the a->b stamp is refreshed only when b wakes, so a
+    crash window (or a slow partner) drives its staleness far past
+    sched.D — the partner-read ring slots must clamp to D_max instead of
+    aliasing to a wrong (much fresher) snapshot.  run_adpsgd asserts the
+    no-alias invariant host-side; this run crosses both crash windows."""
+    from repro.core import get_scenario
+
+    n = 8
+    sc = get_scenario(scenario_name, n)
+    gfn = lambda i, x, key: 0.1 * x  # noqa: E731
+    x0 = jnp.ones((n, 3))
+    x, _ = run_adpsgd(undirected_ring(n), gfn, x0, 0.05, 5000,
+                      scenario=sc, seed=0)
+    assert np.all(np.isfinite(np.asarray(x)))
+
+
+def test_eval_fn_receives_bare_iterate_everywhere():
+    """Uniform eval_fn contract: every baseline hands the iterate array
+    (never the raw carry tuple) and a float virtual time."""
+    n, p = 5, 4
+    gfn, _ = quad_grad_fn(n, p)
+    topo_d, topo_u = directed_ring(n), undirected_ring(n)
+    x0 = jnp.zeros((n, p))
+    seen = {}
+
+    def spy(tag, want_shape):
+        def eval_fn(x, t):
+            assert not isinstance(x, tuple), tag
+            assert jnp.asarray(x).shape == want_shape, (tag, x.shape)
+            assert isinstance(t, float)
+            seen[tag] = True
+            return {"loss": 0.0, "t": t}
+        return eval_fn
+
+    run_push_pull_sync(topo_d, gfn, x0, 0.05, 12, eval_every=6,
+                       eval_fn=spy("pps", (n, p)))
+    run_sab(topo_d, gfn, x0, 0.05, 12, eval_every=6,
+            eval_fn=spy("sab", (n, p)))
+    run_dpsgd(topo_u, gfn, x0, 0.05, 12, eval_every=6,
+              eval_fn=spy("dpsgd", (n, p)))
+    run_ring_allreduce(n, gfn, jnp.zeros(p), 0.05, 12, eval_every=6,
+                       eval_fn=spy("ring", (p,)))
+    run_adpsgd(topo_u, gfn, x0, 0.05, 40, eval_every=20,
+               eval_fn=spy("adpsgd", (n, p)))
+    run_osgp(topo_d, gfn, x0, 0.05, 40, eval_every=20,
+             eval_fn=spy("osgp", (n, p)))
+    assert set(seen) == {"pps", "sab", "dpsgd", "ring", "adpsgd", "osgp"}
+
+
+def test_shared_scenario_times_consistent_across_algorithms():
+    """One scenario instance drives every algorithm; each reports
+    strictly increasing virtual times, and under the straggler profile
+    async clocks advance past the same horizon the sync barrier pays."""
+    n, p = 5, 4
+    gfn, _ = quad_grad_fn(n, p)
+    sc = NetworkScenario(compute_time=(1, 1, 1, 1, 4.0), latency=0.2)
+    x0 = jnp.zeros((n, p))
+
+    def collect():
+        box = []
+        return box, lambda x, t: (box.append(t), {"loss": 0.0, "t": t})[1]
+
+    ts_sync, f = collect()
+    run_dpsgd(undirected_ring(n), gfn, x0, 0.05, 20, scenario=sc,
+              eval_every=2, eval_fn=f)
+    ts_ad, g = collect()
+    run_adpsgd(undirected_ring(n), gfn, x0, 0.05, 200, scenario=sc,
+               eval_every=40, eval_fn=g)
+    ts_osgp, h = collect()
+    run_osgp(directed_ring(n), gfn, x0, 0.05, 200, scenario=sc,
+             eval_every=40, eval_fn=h)
+    for ts in (ts_sync, ts_ad, ts_osgp):
+        assert len(ts) > 2 and np.all(np.diff(ts) > 0)
+    # barrier rounds pay the 4x straggler every round: per-round cost > 4;
+    # the event clock advances ~n events per straggler period
+    assert ts_sync[0] / 2 > 4.0
+
+
+@pytest.mark.slow
 def test_osgp_degrades_with_loss_rfast_does_not():
     """The paper's core robustness claim: push-sum loses mass under packet
     loss; R-FAST's running-sum ρ recovers it."""

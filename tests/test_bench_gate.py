@@ -1,0 +1,79 @@
+"""The benchmark regression gate: errored and vanished rows must fail
+alongside >threshold regressions (they used to be silently skipped)."""
+import importlib.util
+import json
+import pathlib
+
+_RUN_PY = pathlib.Path(__file__).resolve().parents[1] / "benchmarks" / "run.py"
+_spec = importlib.util.spec_from_file_location("bench_run_for_test", _RUN_PY)
+bench_run = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_run)
+
+
+def _row(suite, name, us, derived=""):
+    return {"suite": suite, "name": name, "us_per_call": us,
+            "derived": derived}
+
+
+def _write_baseline(tmp_path, rows):
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps({"rows": rows}))
+    return str(path)
+
+
+def test_gate_flags_regressions_errors_and_missing(tmp_path):
+    base = _write_baseline(tmp_path, [
+        _row("sim", "fast", 100.0),
+        _row("sim", "vanished", 50.0),
+        _row("unrun_suite", "other", 10.0),
+    ])
+    records = [
+        _row("sim", "fast", 140.0),                 # +40% regression
+        _row("sim", "broken", None, "ERROR:Boom"),  # errored this run
+        _row("sim", "brand_new", 5.0),              # new row: not a problem
+    ]
+    problems = bench_run._compare(records, base, 0.25)
+    kinds = sorted(p["problem"] for p in problems)
+    assert kinds == ["errored", "missing", "regression"]
+    missing = next(p for p in problems if p["problem"] == "missing")
+    assert (missing["suite"], missing["name"]) == ("sim", "vanished")
+    # suites that did not run are not reported as missing
+    assert not any(p.get("name") == "other" for p in problems)
+
+
+def test_gate_passes_clean_run(tmp_path):
+    base = _write_baseline(tmp_path, [_row("sim", "fast", 100.0)])
+    records = [_row("sim", "fast", 110.0)]   # +10% < 25% threshold
+    assert bench_run._compare(records, base, 0.25) == []
+
+
+def test_gate_skips_missing_check_when_run_meta_differs(tmp_path):
+    """--impl / --quick subsets legitimately drop rows the baseline has
+    (e.g. the jnp rows of a both-impls kernels baseline): the missing
+    gate must only fire when the run settings match the baseline's."""
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps({
+        "meta": {"quick": False, "impl": "both"},
+        "rows": [_row("kernels", "round_jnp", 10.0),
+                 _row("kernels", "round_pallas", 20.0)],
+    }))
+    # pallas-only run: the jnp row is absent and per-call times are not
+    # comparable (different settings) — neither missing nor the apparent
+    # "regression" may fire
+    records = [_row("kernels", "round_pallas", 90.0)]
+    assert bench_run._compare(records, str(path), 0.25,
+                              run_meta={"quick": False,
+                                        "impl": "pallas"}) == []
+    # matching meta: both the vanished row and the regression fail
+    probs = bench_run._compare(records, str(path), 0.25,
+                               run_meta={"quick": False, "impl": "both"})
+    assert sorted(p["problem"] for p in probs) == ["missing", "regression"]
+
+
+def test_gate_ignores_zero_or_errored_baseline_rows(tmp_path):
+    base = _write_baseline(tmp_path, [
+        _row("sim", "was_broken", None),
+        _row("sim", "was_zero", 0.0),
+    ])
+    records = [_row("sim", "was_broken", 10.0), _row("sim", "was_zero", 9.0)]
+    assert bench_run._compare(records, base, 0.25) == []

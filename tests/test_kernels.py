@@ -39,6 +39,7 @@ def test_rfast_update_sweep(P, dtype):
                                    rtol=tol, atol=tol)
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(P=st.integers(1, 5000), Kw=st.integers(1, 4), Ka=st.integers(1, 4),
        Ko=st.integers(1, 4), seed=st.integers(0, 100))
@@ -81,6 +82,7 @@ def test_flash_attention_sweep(B, S, H, KV, D, causal, window, dtype):
                                np.asarray(p, np.float32), rtol=tol, atol=tol)
 
 
+@pytest.mark.slow
 def test_flash_attention_block_sizes():
     q, k, v = _arr((1, 256, 2, 64)), _arr((1, 256, 2, 64)), _arr((1, 256, 2, 64))
     r = flash_attention(q, k, v, impl="ref")
@@ -135,6 +137,7 @@ def test_ssm_scan_chunking_invariance():
 @pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
                                            (False, None)])
 @pytest.mark.parametrize("B,H,S,D", [(1, 2, 128, 32), (2, 2, 256, 64)])
+@pytest.mark.slow
 def test_flash_attention_backward(B, H, S, D, causal, window):
     from repro.kernels.flash_attention.backward import flash_attention_vjp
     from repro.kernels.flash_attention.ref import attention_ref

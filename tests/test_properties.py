@@ -1,6 +1,7 @@
 """Hypothesis property tests on system invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
@@ -58,6 +59,7 @@ def test_schedule_is_valid_assumption_3(name, n, loss, seed):
         assert np.all(np.diff(ti) > 0)
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(
     name=st.sampled_from(TOPO_NAMES),

@@ -130,6 +130,7 @@ def _run_impl(round_fn, state, batches, n, e_pad, rounds, loss_prob, seed,
 # ------------------------------------------------------------------ #
 @pytest.mark.parametrize("name,n", TOPOS)
 @pytest.mark.parametrize("loss_prob", [0.0, 0.4])
+@pytest.mark.slow
 def test_backends_match_prerefactor_round(name, n, loss_prob):
     topo = get_topology(name, n)
     spec = edge_arrays(topo)

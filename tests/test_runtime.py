@@ -76,6 +76,7 @@ def test_runtime_robust_path_matches_sync_when_all_delivered():
                                rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_runtime_converges_under_packet_loss():
     topo = binary_tree(5)
     state, x_star = _run(

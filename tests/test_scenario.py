@@ -1,0 +1,280 @@
+"""The unified virtual-time engine: golden compat, clock properties,
+loss/straggler/crash models, and the named-scenario registry."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    GilbertElliott, NetworkScenario, SCENARIOS, binary_tree, directed_ring,
+    exponential, generate_schedule, get_scenario, undirected_ring,
+)
+
+
+# ------------------------------------------------------------------ #
+# golden: the compat shim reproduces the pre-refactor generator
+# bit-for-bit (same seed -> identical Schedule arrays)
+# ------------------------------------------------------------------ #
+def _pre_refactor_generate_schedule(topo, K, *, compute_time=None,
+                                    jitter=0.2, latency=0.1, loss_prob=0.0,
+                                    D_max=None, seed=0, failures=None):
+    """Verbatim copy of ``schedule.generate_schedule`` as of PR 2 (the
+    last pre-scenario revision) — the golden oracle.  Returns the raw
+    arrays (agent, stamp_v, stamp_rho, times, max_delay)."""
+    rng = np.random.default_rng(seed)
+    n = topo.n
+    if compute_time is None:
+        compute_time = np.ones(n)
+    compute_time = np.asarray(compute_time, dtype=np.float64)
+    if D_max is None:
+        D_max = 4 * n + 16
+
+    edges_w = topo.edges_W()
+    edges_a = topo.edges_A()
+    out_w = {i: [] for i in range(n)}
+    out_a = {i: [] for i in range(n)}
+    in_w = {i: [] for i in range(n)}
+    in_a = {i: [] for i in range(n)}
+    for e, (j, i) in enumerate(edges_w):
+        out_w[j].append(e)
+        in_w[i].append(e)
+    for e, (j, i) in enumerate(edges_a):
+        out_a[j].append(e)
+        in_a[i].append(e)
+
+    arrivals_w = [[] for _ in edges_w]
+    arrivals_a = [[] for _ in edges_a]
+    best_w = np.zeros(len(edges_w), dtype=np.int64)
+    best_a = np.zeros(len(edges_a), dtype=np.int64)
+
+    clocks = rng.uniform(0.0, 1.0, n) * compute_time
+    for (fn_, t0_, t1_) in (failures or []):
+        if clocks[fn_] >= t0_:
+            clocks[fn_] = max(clocks[fn_], t1_)
+    agent = np.zeros(K, dtype=np.int32)
+    stamp_v = np.zeros((K, max(1, len(edges_w))), dtype=np.int32)
+    stamp_rho = np.zeros((K, max(1, len(edges_a))), dtype=np.int32)
+    times = np.zeros(K, dtype=np.float64)
+    max_delay = 0
+
+    for k in range(K):
+        a = int(np.argmin(clocks))
+        now = float(clocks[a])
+        agent[k] = a
+        times[k] = now
+
+        for e in in_w[a]:
+            q = arrivals_w[e]
+            keep = []
+            for (t_arr, s) in q:
+                if t_arr <= now:
+                    if s > best_w[e]:
+                        best_w[e] = s
+                else:
+                    keep.append((t_arr, s))
+            arrivals_w[e][:] = keep
+            if k - best_w[e] > D_max:
+                best_w[e] = k - D_max
+        for e in in_a[a]:
+            q = arrivals_a[e]
+            keep = []
+            for (t_arr, s) in q:
+                if t_arr <= now:
+                    if s > best_a[e]:
+                        best_a[e] = s
+                else:
+                    keep.append((t_arr, s))
+            arrivals_a[e][:] = keep
+            if k - best_a[e] > D_max:
+                best_a[e] = k - D_max
+
+        stamp_v[k] = best_w if len(edges_w) else 0
+        stamp_rho[k] = best_a if len(edges_a) else 0
+        for e in in_w[a]:
+            max_delay = max(max_delay, k - int(best_w[e]))
+        for e in in_a[a]:
+            max_delay = max(max_delay, k - int(best_a[e]))
+
+        for e in out_w[a]:
+            if rng.uniform() >= loss_prob:
+                arrivals_w[e].append((now + rng.exponential(latency), k + 1))
+        for e in out_a[a]:
+            if rng.uniform() >= loss_prob:
+                arrivals_a[e].append((now + rng.exponential(latency), k + 1))
+
+        clocks[a] = now + compute_time[a] * (1.0 + rng.uniform(-jitter, jitter))
+        for (fn_, t0_, t1_) in (failures or []):
+            if fn_ == a and t0_ <= clocks[a] < t1_:
+                clocks[a] = t1_
+
+    return agent, stamp_v, stamp_rho, times, max(1, max_delay)
+
+
+GOLDEN_CASES = [
+    ("plain", binary_tree(7), 500, {}),
+    ("lossy", directed_ring(5), 400,
+     dict(seed=3, loss_prob=0.3, latency=0.5)),
+    ("straggler", exponential(8), 600,
+     dict(seed=7, compute_time=[1, 1, 1, 4, 1, 1, 1, 1], jitter=0.35)),
+    ("crash", binary_tree(7), 800,
+     dict(seed=11, loss_prob=0.1, failures=[(2, 50.0, 90.0)], D_max=40)),
+]
+
+
+@pytest.mark.parametrize("name,topo,K,kw",
+                         GOLDEN_CASES, ids=[c[0] for c in GOLDEN_CASES])
+def test_compat_shim_matches_pre_refactor_bit_for_bit(name, topo, K, kw):
+    agent, stamp_v, stamp_rho, times, D = _pre_refactor_generate_schedule(
+        topo, K, **kw)
+    sched = generate_schedule(topo, K, **kw)
+    np.testing.assert_array_equal(sched.agent, agent)
+    np.testing.assert_array_equal(sched.stamp_v, stamp_v)
+    np.testing.assert_array_equal(sched.stamp_rho, stamp_rho)
+    np.testing.assert_array_equal(sched.times, times)   # exact, not approx
+    assert sched.D == D
+
+
+def test_shim_scenario_kwarg_equals_direct_realize():
+    topo = binary_tree(7)
+    sc = NetworkScenario(latency=0.4, loss=0.2)
+    a = generate_schedule(topo, 300, scenario=sc, seed=5)
+    b = sc.realize(topo, 300, seed=5).schedule
+    np.testing.assert_array_equal(a.agent, b.agent)
+    np.testing.assert_array_equal(a.times, b.times)
+    with pytest.raises(ValueError):
+        generate_schedule(topo, 10, scenario=sc, loss_prob=0.5)
+
+
+# ------------------------------------------------------------------ #
+# clock properties: strictly increasing, straggler-monotone
+# ------------------------------------------------------------------ #
+def test_event_and_sync_clocks_strictly_increasing():
+    topo = binary_tree(7)
+    sc = get_scenario("straggler", 7)
+    sched = sc.realize(topo, 2000, seed=0).schedule
+    assert np.all(np.diff(sched.times) > 0)
+    times = sc.sync_round_times(topo, 200, seed=0)
+    assert np.all(np.diff(times) > 0) and times[0] > 0
+
+
+def test_straggler_monotone_under_shared_scenario():
+    """Slowing one node can only slow the clocks: the sync barrier is
+    pointwise later (same seed, same draw structure), the event clock's
+    horizon stretches, and the straggler wakes less often."""
+    n, topo = 8, binary_tree(8)
+    uni = get_scenario("uniform", n)
+    strag = get_scenario("straggler", n)   # last node 4x slow
+
+    t_uni = uni.sync_round_times(topo, 150, seed=0)
+    t_str = strag.sync_round_times(topo, 150, seed=0)
+    assert np.all(t_str >= t_uni)
+
+    s_uni = uni.realize(topo, 3000, seed=0).schedule
+    s_str = strag.realize(topo, 3000, seed=0).schedule
+    assert s_str.times[-1] > s_uni.times[-1]
+    counts = np.bincount(s_str.agent, minlength=n)
+    assert counts[-1] < counts[:-1].min()   # the straggler wakes least
+
+
+def test_time_varying_straggler_windows():
+    """flaky_straggler: the last node is 6x slow only inside its windows —
+    its wake rate collapses there and recovers outside."""
+    n = 6
+    sc = get_scenario("flaky_straggler", n)
+    sched = sc.realize(binary_tree(n), 4000, seed=1).schedule
+    t, a = sched.times, sched.agent
+    in_win = ((t >= 100) & (t < 300)) | ((t >= 600) & (t < 800))
+    # windows cover enough of the horizon to measure
+    assert in_win.sum() > 200 and (~in_win).sum() > 200
+    rate_in = (a[in_win] == n - 1).mean()
+    rate_out = (a[~in_win] == n - 1).mean()
+    assert rate_in < 0.5 * rate_out, (rate_in, rate_out)
+
+
+# ------------------------------------------------------------------ #
+# loss and crash models
+# ------------------------------------------------------------------ #
+def test_gilbert_elliott_bursty_loss():
+    """Same ~20% stationary loss as Bernoulli, but concentrated in
+    bursts: long loss runs exist that Bernoulli essentially never has."""
+    def longest_loss_run(ok):
+        worst = run = 0
+        for v in ok:
+            run = 0 if v else run + 1
+            worst = max(worst, run)
+        return worst
+
+    topo = directed_ring(2)   # one A-edge per node: per-edge streams
+    ge = NetworkScenario(gilbert_elliott=GilbertElliott(p_gb=0.025, p_bg=0.1))
+    be = NetworkScenario(loss=0.2)
+    K = 4000
+    tr_ge = ge.realize(topo, K, seed=2)
+    tr_be = be.realize(topo, K, seed=2)
+
+    # per-edge outcome stream = rows where that edge's sender was active
+    def edge_stream(tr, e, src):
+        rows = tr.schedule.agent == src
+        return tr.send_ok_a[rows, e]
+
+    src_of = [j for (j, i) in topo.edges_A()]
+    loss_ge = 1 - np.concatenate(
+        [edge_stream(tr_ge, e, s) for e, s in enumerate(src_of)]).mean()
+    assert 0.1 < loss_ge < 0.35, loss_ge   # near the stationary 20%
+    burst_ge = max(longest_loss_run(edge_stream(tr_ge, e, s))
+                   for e, s in enumerate(src_of))
+    burst_be = max(longest_loss_run(edge_stream(tr_be, e, s))
+                   for e, s in enumerate(src_of))
+    assert burst_ge >= 10           # mean burst length 1/p_bg = 10
+    assert burst_be <= 8            # P(run of 9 at p=.2) ~ 1e-6 per start
+
+
+def test_crash_window_silences_node_on_both_clocks():
+    n = 7
+    sc = NetworkScenario(latency=0.3, failures=((3, 40.0, 120.0),))
+    sched = sc.realize(binary_tree(n), 3000, seed=4).schedule
+    t = sched.times[sched.agent == 3]
+    assert not np.any((t > 41.0) & (t < 119.0))
+    # the barrier stalls: no sync round completes inside the window
+    times = sc.sync_round_times(binary_tree(n), 100, seed=4)
+    assert not np.any((times > 41.0) & (times < 119.0))
+    # but rounds resume after recovery
+    assert np.any(times > 120.0)
+
+
+def test_per_edge_latency_override_slows_that_edge():
+    topo = binary_tree(7)
+    e = topo.edges_W().index((0, 1))
+    slow = NetworkScenario(edge_latency={(0, 1): 9.0}, latency=0.1)
+    base = NetworkScenario(latency=0.1)
+    k = np.arange(400)
+    stale_slow = (k - slow.realize(topo, 400, seed=0)
+                  .schedule.stamp_v[:, e]).mean()
+    stale_base = (k - base.realize(topo, 400, seed=0)
+                  .schedule.stamp_v[:, e]).mean()
+    assert stale_slow > 1.5 * stale_base, (stale_slow, stale_base)
+
+
+def test_send_outcomes_only_for_active_agent():
+    sc = NetworkScenario(loss=0.3)
+    tr = sc.realize(binary_tree(7), 500, seed=0)
+    out_w = {i: [] for i in range(7)}
+    for e, (j, _i) in enumerate(binary_tree(7).edges_W()):
+        out_w[j].append(e)
+    for k in range(500):
+        a = int(tr.schedule.agent[k])
+        ok_edges = np.nonzero(tr.send_ok_w[k])[0]
+        assert all(e in out_w[a] for e in ok_edges)
+
+
+# ------------------------------------------------------------------ #
+# registry
+# ------------------------------------------------------------------ #
+def test_named_scenarios_realize_everywhere():
+    for name in SCENARIOS:
+        sc = get_scenario(name, 6)
+        assert sc.name == name
+        tr = sc.realize(undirected_ring(6), 200, seed=0)
+        assert tr.schedule.K == 200
+        assert np.all(np.diff(tr.schedule.times) > 0)
+        times = sc.sync_round_times(undirected_ring(6), 20, seed=0)
+        assert np.all(np.diff(times) > 0)
+    with pytest.raises(KeyError):
+        get_scenario("nope", 4)

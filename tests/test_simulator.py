@@ -78,6 +78,7 @@ def sync_rfast_reference(topo, grad_fn, x0, gamma, rounds):
 
 
 @pytest.mark.parametrize("builder", [binary_tree, directed_ring])
+@pytest.mark.slow
 def test_round_robin_matches_sync_reference(builder):
     n, p, rounds = 5, 6, 12
     topo = builder(n)
@@ -95,6 +96,7 @@ def test_round_robin_matches_sync_reference(builder):
 # ------------------------------------------------------------------ #
 @pytest.mark.parametrize("loss", [0.0, 0.3])
 @pytest.mark.parametrize("builder", [binary_tree, directed_ring, exponential])
+@pytest.mark.slow
 def test_mass_conservation(builder, loss):
     n, p, K = 7, 5, 400
     topo = builder(n)
@@ -114,6 +116,7 @@ def test_mass_conservation(builder, loss):
 @pytest.mark.parametrize("name,K", [("binary_tree", 6000), ("line", 6000),
                                     ("directed_ring", 6000),
                                     ("exponential", 12000), ("mesh2d", 6000)])
+@pytest.mark.slow
 def test_convergence_all_topologies(name, K):
     """Paper Fig. 4a: R-FAST converges on all five topologies."""
     n, p = 7, 8
@@ -162,6 +165,7 @@ def test_heterogeneity_free_fixed_point():
 # ------------------------------------------------------------------ #
 # Logistic regression (paper §VI-A): loss decreases to near-optimal
 # ------------------------------------------------------------------ #
+@pytest.mark.slow
 def test_logistic_regression_training():
     n = 7
     prob = make_logistic_problem(n, m=700, d=20, batch=16,
@@ -190,6 +194,7 @@ def test_push_pull_sync_geometric():
     assert err < 1e-3, err
 
 
+@pytest.mark.slow
 def test_multi_root_parameter_server_topology():
     """Appendix G / Fig. 15: multiple common roots (PS-like structure with
     3 servers) — R-FAST converges over it."""
@@ -205,6 +210,7 @@ def test_multi_root_parameter_server_topology():
     assert err < 2e-2, err
 
 
+@pytest.mark.slow
 def test_node_crash_and_recovery():
     """Beyond-paper robustness probe: a node crashes for a long window
     (bounded downtime => Assumption 3 with a larger realized T); the

@@ -18,6 +18,7 @@ def _params():
 
 @pytest.mark.parametrize("opt_fn", [
     lambda: sgd(0.1), lambda: momentum(0.1, 0.9), lambda: adamw(0.05)])
+@pytest.mark.slow
 def test_optimizers_descend_quadratic(opt_fn):
     opt = opt_fn()
     params = {"x": jnp.array([5.0, -3.0])}

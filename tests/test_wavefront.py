@@ -50,6 +50,7 @@ SCENARIOS = [
 ]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("sc", SCENARIOS)
 def test_wavefront_matches_event_serial(sc):
     n, p, K = sc["n"], 6, 600
@@ -153,6 +154,7 @@ def test_commit_matches_full_kernel(impl, P, Kw, Ka, Ko):
                                    rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_commit_kernel_protocol_round_random_topologies():
     """The pallas protocol round (now commit-only) still matches the jnp
     backend on random topologies under random loss masks."""
