@@ -4,19 +4,29 @@ algorithm on the SAME :class:`~repro.core.scenario.NetworkScenario`
 virtual clock — identical stragglers, latency, loss bursts, and
 crash/recovery windows, so the comparison is apples-to-apples.
 
-Row format: ``showdown/<scenario>/<algo>`` with derived
-``vtime=<time-to-target-loss>;acc=<final>;ratio=<vtime/vtime_rfast>``.
+Two workload families:
+
+* ``showdown/<scenario>/<algo>`` — the paper's §VI logistic regression.
+* ``lm/<scenario>/<algo>`` (:func:`run_lm`) — the reduced transformer
+  LM on the flat-parameter substrate: R-FAST trains through the
+  wavefront engine over the scenario's event clock, the synchronous
+  baselines consume the same flat ``grad_fn`` under the barrier clock.
+
+Row derived fields: ``vtime=<time-to-target-loss>;acc=<final>``
+(+ ``loss=<final>`` for lm rows) ``;ratio=<vtime/vtime_rfast>``.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs import get_config
 from repro.core import get_scenario, get_topology
 from repro.core.baselines import (run_adpsgd, run_dpsgd, run_osgp,
                                   run_ring_allreduce, run_sab)
+from repro.data import make_lm_problem
 from .common import (csv_row, eval_fn_for, logistic_setup,
-                     run_rfast_logistic, stopwatch, time_to_loss)
+                     run_rfast_problem, stopwatch, time_to_loss)
 
 SCENARIO_NAMES = ("straggler", "packet_loss", "crash_recovery")
 
@@ -49,9 +59,9 @@ def run(target: float = 0.35, n: int = 8, rounds: int = 1000,
             return t
 
         # --- R-FAST (async, the scenario's event clock) ----------------
-        _, ms, wall = run_rfast_logistic(prob, "binary_tree", K,
-                                         gamma=gamma, scenario=sc,
-                                         eval_every=max(200, K // 40))
+        _, ms, wall = run_rfast_problem(prob, "binary_tree", K,
+                                        gamma=gamma, scenario=sc,
+                                        eval_every=max(200, K // 40))
         t_rfast = emit("R-FAST", wall, K, ms)
 
         # --- synchronous baselines (the scenario's barrier clock) ------
@@ -77,5 +87,68 @@ def run(target: float = 0.35, n: int = 8, rounds: int = 1000,
     return rows
 
 
+def run_lm(drop: float = 1.4, n: int = 4, rounds: int = 120,
+           gamma: float = 2e-2, scenarios: tuple[str, ...] = SCENARIO_NAMES,
+           ) -> list[str]:
+    """``lm/<scenario>/<algo>`` time-to-loss rows on the reduced LM.
+
+    Every algorithm starts from the same init and consumes the same
+    flat-substrate gradients; the target is an absolute loss drop of
+    ``drop`` nats from the shared initial eval loss (the Zipfian token
+    marginal leaves real headroom below the uniform floor).  ``drop``
+    must put the target well below the first few rounds' loss and every
+    algorithm is evaluated every (equivalent-)round, so the vtime
+    columns measure crossing times, not eval cadence.
+    """
+    cfg = get_config("rfast-100m").reduced(max_d_model=64, vocab=128)
+    prob = make_lm_problem(cfg, n, batch_per_node=4, seq_len=32,
+                           eval_batch=16)
+    gfn = prob.grad_fn()
+    eval_fn = eval_fn_for(prob)
+    K = rounds * n
+    l0 = float(prob.mean_loss(prob.x0_flat))
+    target = l0 - drop
+    x0 = jnp.tile(prob.x0_flat[None], (n, 1))
+    topo_d = get_topology("directed_ring", n)
+    topo_u = get_topology("undirected_ring", n)
+
+    rows = []
+    for sc_name in scenarios:
+        sc = get_scenario(sc_name, n)
+
+        def emit(name, wall, per, ms, t_ref=None):
+            t = time_to_loss(ms, target)
+            ratio = ""
+            if t_ref is not None:
+                ratio = (f";ratio={t / t_ref:.2f}"
+                         if np.isfinite(t) and np.isfinite(t_ref)
+                         and t_ref > 0 else ";ratio=inf")
+            rows.append(csv_row(
+                f"lm/{sc_name}/{name}", wall / per * 1e6,
+                f"vtime={t:.1f};loss={ms[-1]['loss']:.3f};"
+                f"acc={ms[-1]['acc']:.3f}{ratio}"))
+            return t
+
+        # --- R-FAST (async: the wavefront engine on the event clock) ---
+        _, ms, wall = run_rfast_problem(prob, "binary_tree", K,
+                                        gamma=gamma, scenario=sc,
+                                        eval_every=n)
+        t_rfast = emit("R-FAST", wall, K, ms)
+
+        # --- synchronous baselines (the scenario's barrier clock) ------
+        ev = 1
+        for name, fn, args in (
+            ("Ring-AllReduce", run_ring_allreduce,
+             (n, gfn, prob.x0_flat, gamma, rounds)),
+            ("D-PSGD", run_dpsgd, (topo_u, gfn, x0, gamma, rounds)),
+            ("S-AB", run_sab, (topo_d, gfn, x0, gamma, rounds)),
+        ):
+            with stopwatch() as sw:
+                _, ms = fn(*args, scenario=sc, eval_fn=eval_fn,
+                           eval_every=ev)
+            emit(name, sw["s"], rounds, ms, t_rfast)
+    return rows
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    print("\n".join(run() + run_lm()))

@@ -73,7 +73,8 @@ def main() -> None:
             K=4000 if args.quick else 12_000),
         "kernels": lambda: bench_kernels.run(impl=args.impl or None),
         "showdown": lambda: bench_showdown.run(
-            rounds=150 if args.quick else 1000),
+            rounds=150 if args.quick else 1000)
+        + bench_showdown.run_lm(rounds=40 if args.quick else 120),
     }
     only = [s for s in args.only.split(",") if s]
     meta = {"quick": bool(args.quick), "impl": args.impl or "both",
@@ -113,8 +114,9 @@ def _compare(records: list[dict], baseline_path: str,
     """Diff ``records`` against a committed BENCH_*.json.
 
     Returns every row that should fail the gate: regressions beyond
-    ``threshold``, rows that errored this run (``us_per_call`` is None),
-    and baseline rows that disappeared.  Regressions and vanished rows
+    ``threshold``, rows that errored this run (derived ``ERROR:...`` —
+    correctness-only rows intentionally record ``nan`` us and must NOT
+    gate), and baseline rows that disappeared.  Regressions and vanished rows
     are only gated when the run's quick/impl settings match the
     baseline's recorded meta (quick changes per-call compile
     amortization, impl changes which rows exist), and vanished rows only
@@ -140,9 +142,11 @@ def _compare(records: list[dict], baseline_path: str,
         base = old.get((r["suite"], r["name"]))
         new = r["us_per_call"]
         if new is None:
-            print(f"# {r['suite']}/{r['name']}: ERRORED this run "
-                  f"({r['derived']})", file=sys.stderr)
-            problems.append({**r, "problem": "errored"})
+            if str(r.get("derived", "")).startswith("ERROR:"):
+                print(f"# {r['suite']}/{r['name']}: ERRORED this run "
+                      f"({r['derived']})", file=sys.stderr)
+                problems.append({**r, "problem": "errored"})
+            # else: a correctness-only row (nan us by design) — no gate
             continue
         if not base:
             # new row, or the baseline errored there (None) or recorded

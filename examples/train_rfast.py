@@ -1,11 +1,17 @@
-"""End-to-end driver: train an LM with the production R-FAST runtime.
+"""End-to-end driver: train an LM with the R-FAST protocol.
 
-Default is a CI-scale reduced model; pass ``--full`` to train the real
-~100M-param ``rfast-100m`` config for a few hundred steps (hours on CPU,
-minutes on real accelerators).
+Default is a CI-scale reduced model through the synchronous production
+runtime; pass ``--full`` to train the real ~100M-param ``rfast-100m``
+config for a few hundred steps (hours on CPU, minutes on real
+accelerators).  Pass ``--scenario <name>`` to train *fully
+asynchronously* instead: the named NetworkScenario (stragglers, lossy
+links, crash/recovery — see ``repro.core.scenario.SCENARIOS``) is
+realized into a per-event trace and the model rides the wavefront
+engine on the flat-parameter substrate.
 
     PYTHONPATH=src python examples/train_rfast.py                  # smoke
     PYTHONPATH=src python examples/train_rfast.py --full --steps 300
+    PYTHONPATH=src python examples/train_rfast.py --scenario straggler
 """
 import argparse
 import subprocess
@@ -14,15 +20,27 @@ import sys
 ap = argparse.ArgumentParser()
 ap.add_argument("--full", action="store_true")
 ap.add_argument("--steps", type=int, default=0)
+ap.add_argument("--scenario", default="",
+                help="train asynchronously under a named NetworkScenario "
+                     "(e.g. straggler, packet_loss, crash_recovery)")
 ap.add_argument("--loss-prob", type=float, default=0.1,
-                help="simulated packet loss (exercises robust tracking)")
+                help="simulated packet loss in the synchronous rounds "
+                     "(exercises robust tracking); ignored with --scenario")
 args = ap.parse_args()
 
+# ckpt dirs are regime- and scale-specific: the sync runtime persists a
+# ProtocolState pytree, --scenario a flat RFASTState, and --full a
+# different parameter count — mixing them in one dir cannot resume
+ckpt = (f"/tmp/rfast_ckpt_{args.scenario or 'sync'}"
+        f"_{'full' if args.full else 'reduced'}")
 cmd = [sys.executable, "-m", "repro.launch.train",
        "--arch", "rfast-100m",
        "--nodes", "4", "--topology", "binary_tree",
-       "--loss-prob", str(args.loss_prob),
-       "--ckpt", "/tmp/rfast_ckpt"]
+       "--ckpt", ckpt]
+if args.scenario:
+    cmd += ["--scenario", args.scenario]   # the scenario owns loss/delay
+else:
+    cmd += ["--loss-prob", str(args.loss_prob)]
 if args.full:
     cmd += ["--steps", str(args.steps or 300), "--seq", "512",
             "--batch-per-node", "8", "--gamma", "1e-3"]

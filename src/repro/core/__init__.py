@@ -11,6 +11,10 @@ from .topology import (  # noqa: F401
     validate_weights, spanning_tree_roots, common_roots,
 )
 from .plan import CommPlan, build_comm_plan, matchings  # noqa: F401
+from .paramvec import (  # noqa: F401
+    RavelSpec, make_ravel_spec, ravel, unravel,
+    GradProvider, ModelGradProvider, as_grad_fn,
+)
 from .protocol import (  # noqa: F401
     ProtocolState, init_protocol_state, make_protocol_round,
     protocol_tracked_mass, descent_step, momentum_mix, consensus_mix,

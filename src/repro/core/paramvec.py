@@ -1,0 +1,206 @@
+"""The flat-parameter substrate: any model pytree as one ``(p,)`` lane.
+
+The asynchronous engines (:mod:`repro.core.simulator`) run Algorithm 2
+over flat per-node parameter vectors — their :class:`PackedState` fuses
+``x/v/z/g_prev`` into ``(n, 4, p)`` rows and commits O(p) history deltas
+per event.  Real models are pytrees.  This module owns the bridge, in
+both directions:
+
+* :class:`RavelSpec` — a static flatten/unflatten plan for a pytree:
+  per-leaf shapes/dtypes/offsets, a working dtype for the flat buffer
+  (protocol state accumulates in fp32 regardless of the model's leaf
+  dtypes), and tail padding to a lane multiple (``pad_to=128`` keeps
+  the fused ``kernels/rfast_update`` commit kernel's ``(R, 128)``
+  block layout aligned).  :func:`ravel` / :func:`unravel` are traced
+  jnp ops — they compose with jit/vmap/scan, so the model can be
+  rebuilt *inside* an engine's gradient call.
+* :class:`GradProvider` — the protocol every objective speaks to the
+  engines: ``n`` nodes, flat dimension ``p``, and ``grad_fn()``
+  returning the traced ``(i, x_flat, key) -> g_flat`` the engines
+  consume.  ``repro.data.objectives.LogisticProblem`` already conforms
+  structurally; :class:`ModelGradProvider` makes any
+  ``(params, batch, key) -> (loss, grads)`` model gradient conform.
+* :func:`as_grad_fn` — the single resolution point the engines call:
+  a bare callable passes through untouched (the pre-substrate API,
+  kept bit-exact), a provider contributes its ``grad_fn()``.
+
+All protocol operations (S.1–S.5) are linear in the parameter lane, so
+zero-padded tail entries stay exactly zero through descent, consensus,
+tracking, and the ρ running sums — padding is invisible to the
+algorithm and to Lemma 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "RavelSpec", "make_ravel_spec", "ravel", "unravel",
+    "GradProvider", "ModelGradProvider", "as_grad_fn",
+]
+
+FlatGradFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+# (node_id, x_flat, rng_key) -> g_flat, all traced.
+
+
+# --------------------------------------------------------------------- #
+# ravel / unravel
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class RavelSpec:
+    """Static plan flattening one pytree layout to a ``(p,)`` buffer.
+
+    ``p`` includes the tail padding (``p = ceil(p_model / pad_to) *
+    pad_to``); ``p_model`` is the true parameter count.  The spec is
+    hashable-by-identity and closed over by traced code — build it once
+    per model, outside jit.
+    """
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    offsets: tuple[int, ...]        # start of each leaf in the flat buffer
+    p_model: int
+    p: int
+    pad_to: int
+    dtype: Any                      # working dtype of the flat buffer
+
+    def __repr__(self) -> str:      # keep tracebacks readable
+        return (f"RavelSpec(leaves={len(self.shapes)}, "
+                f"p_model={self.p_model}, p={self.p}, "
+                f"pad_to={self.pad_to}, dtype={jnp.dtype(self.dtype).name})")
+
+
+def make_ravel_spec(tree: Any, *, pad_to: int = 1,
+                    dtype=jnp.float32) -> RavelSpec:
+    """Build the flatten/unflatten plan for ``tree``'s layout.
+
+    ``pad_to``: round the flat dimension up to this multiple (128 aligns
+    the fused commit kernel's lane layout; 1 = no padding).
+    ``dtype``: the flat buffer's working dtype — the protocol state
+    accumulates in it; :func:`unravel` casts each leaf back to its own
+    stored dtype.
+    """
+    if pad_to < 1:
+        raise ValueError(f"pad_to must be >= 1, got {pad_to}")
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    offsets = tuple(int(o) for o in np.concatenate([[0],
+                                                    np.cumsum(sizes)[:-1]]))
+    p_model = int(sum(sizes))
+    p = -(-p_model // pad_to) * pad_to
+    return RavelSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                     offsets=offsets, p_model=p_model, p=p, pad_to=pad_to,
+                     dtype=jnp.dtype(dtype))
+
+
+def ravel(spec: RavelSpec, tree: Any) -> jnp.ndarray:
+    """Pytree -> ``(spec.p,)`` flat buffer (cast to the working dtype,
+    zero tail padding).  Traced: usable inside jit/vmap/scan."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if len(leaves) != len(spec.shapes):
+        raise ValueError(f"tree has {len(leaves)} leaves, spec expects "
+                         f"{len(spec.shapes)}")
+    flat = jnp.concatenate(
+        [jnp.reshape(l, (-1,)).astype(spec.dtype) for l in leaves])
+    if spec.p != spec.p_model:
+        flat = jnp.pad(flat, (0, spec.p - spec.p_model))
+    return flat
+
+
+def unravel(spec: RavelSpec, vec: jnp.ndarray) -> Any:
+    """``(spec.p,)`` flat buffer -> pytree (leaf dtypes restored).
+    Traced: usable inside jit/vmap/scan."""
+    leaves = []
+    for shape, dt, off in zip(spec.shapes, spec.dtypes, spec.offsets):
+        size = int(np.prod(shape)) if shape else 1
+        leaf = jax.lax.dynamic_slice_in_dim(vec, off, size)
+        leaves.append(jnp.reshape(leaf, shape).astype(dt))
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+# --------------------------------------------------------------------- #
+# the provider protocol
+# --------------------------------------------------------------------- #
+@runtime_checkable
+class GradProvider(Protocol):
+    """What an objective must expose to drive the flat-vector engines.
+
+    ``n`` — number of nodes (problem (1)'s local distributions D_i),
+    ``p`` — flat parameter dimension, ``grad_fn()`` — the traced
+    ``(i, x_flat, key) -> g_flat`` update the engines consume.
+    ``LogisticProblem`` and ``LMProblem`` both conform.
+    """
+
+    @property
+    def n(self) -> int: ...
+
+    @property
+    def p(self) -> int: ...
+
+    def grad_fn(self) -> FlatGradFn: ...
+
+
+def as_grad_fn(objective: FlatGradFn | GradProvider) -> FlatGradFn:
+    """The engines' single objective-resolution point.
+
+    A bare callable is the pre-substrate API and passes through
+    untouched (bit-exact compatibility); anything exposing
+    ``grad_fn()`` contributes that.
+    """
+    if callable(objective) and not hasattr(objective, "grad_fn"):
+        return objective
+    if hasattr(objective, "grad_fn"):
+        return objective.grad_fn()
+    raise TypeError(
+        f"objective must be a (i, x_flat, key) -> g_flat callable or a "
+        f"GradProvider with .grad_fn(); got {type(objective).__name__}")
+
+
+# --------------------------------------------------------------------- #
+# model gradients as a provider
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ModelGradProvider:
+    """Wrap a model's ``(params, batch, key) -> (loss, grads)`` into the
+    flat ``(i, x_flat, key) -> g_flat`` engine signature.
+
+    ``batch_fn(i, key) -> batch`` must be traced (device-side sampling
+    or a gather from pre-staged arrays): the engines call ``grad_fn``
+    inside ``lax.scan``/``vmap``, so no host work can happen per event.
+    The per-event ``key`` is split between batch sampling and the
+    model's own stochasticity (dropout etc.); the node id is folded into
+    the batch key so nodes draw from distinct shard streams even when a
+    caller hands every node the same key.
+    """
+
+    spec: RavelSpec
+    n_nodes: int
+    value_and_grad: Callable[[Any, Any, jax.Array], tuple[jnp.ndarray, Any]]
+    batch_fn: Callable[[jnp.ndarray, jax.Array], Any]
+
+    @property
+    def n(self) -> int:
+        return self.n_nodes
+
+    @property
+    def p(self) -> int:
+        return self.spec.p
+
+    def grad_fn(self) -> FlatGradFn:
+        spec, vg, batch_fn = self.spec, self.value_and_grad, self.batch_fn
+
+        def gfn(i, x_flat, key):
+            params = unravel(spec, x_flat)
+            bkey, gkey = jax.random.split(key)
+            batch = batch_fn(i, jax.random.fold_in(bkey, i))
+            _, grads = vg(params, batch, gkey)
+            return ravel(spec, grads)
+
+        return gfn

@@ -46,17 +46,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.rfast_update.ops import rfast_commit
+from .paramvec import GradProvider, as_grad_fn
 from .plan import CommPlan, as_comm_plan
 from .protocol import consensus_mix, descent_step, mailbox_merge, tracking_step
 from .schedule import Schedule, build_wavefront_plan
 from .topology import Topology
 
-__all__ = ["RFASTState", "PackedState", "init_state", "pack_state",
-           "unpack_state", "wave_inputs", "rfast_scan",
+__all__ = ["RFASTState", "PackedState", "init_state", "zeros_state",
+           "pack_state", "unpack_state", "wave_inputs", "rfast_scan",
            "rfast_wavefront_scan", "run_rfast", "tracked_mass"]
 
 GradFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 # grad_fn(node_id, x_node, rng_key) -> gradient, all traced.
+# Every engine entry point also accepts a paramvec.GradProvider (e.g.
+# LogisticProblem, LMProblem): the objective is resolved ONCE through
+# paramvec.as_grad_fn, so the engines are objective-agnostic — a bare
+# callable (the pre-substrate API) passes through bit-exact.
+Objective = GradFn | GradProvider
 
 
 class RFASTState(NamedTuple):
@@ -107,11 +114,12 @@ def _prepare(plan: CommPlan) -> _Prepared:
 def init_state(
     topo: Topology | CommPlan,
     x0: jnp.ndarray,
-    grad_fn: GradFn,
+    grad_fn: Objective,
     key: jax.Array,
     H: int,
 ) -> RFASTState:
     """Paper init: z_i^0 = ∇f_i(x_i^0; ζ_i^0); v = ρ = ρ̃ = 0."""
+    grad_fn = as_grad_fn(grad_fn)
     plan = as_comm_plan(topo)
     n = plan.n
     # copy (not asarray): the state may be donated by the engines, and the
@@ -134,6 +142,22 @@ def init_state(
         rho_buf=jnp.zeros((e_a, p), jnp.float32),
         v_hist=jnp.zeros((H, n, p), jnp.float32),
         rho_hist=jnp.zeros((H, e_a, p), jnp.float32),
+    )
+
+
+def zeros_state(topo: Topology | CommPlan, p: int, H: int) -> RFASTState:
+    """Structure-only all-zeros state: shapes/dtypes of a run over
+    ``topo`` with flat dimension ``p`` and history depth ``H``.  The
+    checkpoint-restore template (``load_checkpoint(dir, like=...)``) —
+    no gradient evaluation, unlike :func:`init_state`."""
+    plan = as_comm_plan(topo)
+    n, e_a = plan.n, max(1, plan.n_edges_a)
+    zn = lambda *s: jnp.zeros(s, jnp.float32)
+    return RFASTState(
+        k=jnp.zeros((), jnp.int32),
+        x=zn(n, p), v=zn(n, p), z=zn(n, p), g_prev=zn(n, p),
+        rho=zn(e_a, p), rho_buf=zn(e_a, p),
+        v_hist=zn(H, n, p), rho_hist=zn(H, e_a, p),
     )
 
 
@@ -191,7 +215,7 @@ def _step(
 
 def rfast_scan(
     topo: Topology | CommPlan,
-    grad_fn: GradFn,
+    grad_fn: Objective,
     gamma: float,
     H: int,
     *,
@@ -203,6 +227,7 @@ def rfast_scan(
     ``donate=True`` donates the state argument (in-place update of the
     history rings) — the caller must not reuse the passed-in state.
     """
+    grad_fn = as_grad_fn(grad_fn)
     plan = as_comm_plan(topo)
     pp = _prepare(plan)
     step = partial(_step, pp=pp, grad_fn=grad_fn, gamma=gamma, H=H)
@@ -278,13 +303,23 @@ def _wave_step(
     grad_fn: GradFn,
     gamma: float,
     ko: int,
+    impl: str = "jnp",
+    interpret: bool = True,
 ) -> tuple[PackedState, None]:
     """One wavefront: B independent per-agent updates (distinct agents,
     pre-wavefront reads only — see build_wavefront_plan), committed as
     disjoint O(p) row scatters.  Padding lanes carry sentinel indices:
     their gathers clamp and their commits drop.  All plan-derived tables
     arrive pre-gathered per lane, so the body reads only the four state
-    arrays."""
+    arrays.
+
+    ``impl="pallas"`` routes the S.2b/c + S.4 commit math (the
+    bandwidth-bound tail) through the fused ``rfast_commit`` kernel,
+    vmapped per lane over the flat parameter buffer — the same kernel
+    the production protocol round uses.  The consensus pull stays in
+    jnp either way: the gradient must be sampled at the mixed point x⁺
+    before the commit runs.
+    """
     node_rows = state.nodes[w.agent]                       # (B, 4, p)
     x_l, z_l, gp_l = node_rows[:, 0], node_rows[:, 2], node_rows[:, 3]
 
@@ -301,18 +336,33 @@ def _wave_step(
     g_new = jax.vmap(grad_fn)(w.agent, x_a, w.keys)
     vals_rho = state.rho_hist[w.rslot_rho, w.hist_epos]    # (B, ka, p)
     rho_rows = state.rho2[w.rho_gidx]                      # (B, ko+ka, p)
-    recv = jnp.sum(w.a_val[..., None]
-                   * (vals_rho - rho_rows[:, ko:]), axis=1)
-    z_half = tracking_step(z_l, recv, g_new, gp_l)
 
-    # (S.2c) keep own share; push mass onto out-edges ----------------------
-    z_a = w.a_self[:, None] * z_half
-    rho_new = rho_rows[:, :ko] \
-        + w.out_wt[..., None] * z_half[:, None, :]         # (B, ko, p)
+    if impl == "pallas":
+        # fused commit: z½/z'/ρ'/ρ̃' in one kernel sweep per lane.  The
+        # kernel's masked ρ̃ blend equals the jnp path's unconditional
+        # vals_rho commit: a_val is a 0/1 indicator and zero-mask rows
+        # scatter to the drop sentinel anyway.
+        def one_lane(z_, gn_, go_, ri_, rb_, mk_, ro_, ao_, as_):
+            return rfast_commit(z_, gn_, go_, ri_, rb_, mk_, ro_, ao_,
+                                a_self=as_, impl="pallas",
+                                interpret=interpret)
+        z_a, rho_new, buf_new = jax.vmap(one_lane)(
+            z_l, g_new, gp_l, vals_rho, rho_rows[:, ko:], w.a_val,
+            rho_rows[:, :ko], w.out_wt, w.a_self)
+        rho_commit = jnp.concatenate([rho_new, buf_new], axis=1)
+    else:
+        recv = jnp.sum(w.a_val[..., None]
+                       * (vals_rho - rho_rows[:, ko:]), axis=1)
+        z_half = tracking_step(z_l, recv, g_new, gp_l)
+
+        # (S.2c) keep own share; push mass onto out-edges ------------------
+        z_a = w.a_self[:, None] * z_half
+        rho_new = rho_rows[:, :ko] \
+            + w.out_wt[..., None] * z_half[:, None, :]     # (B, ko, p)
+        rho_commit = jnp.concatenate([rho_new, vals_rho], axis=1)
 
     # commit: disjoint row scatters; (S.4) ρ̃ rows take the consumed values
     node_new = jnp.stack([x_a, v_new, z_a, g_new], axis=1)
-    rho_commit = jnp.concatenate([rho_new, vals_rho], axis=1)
     return PackedState(
         nodes=state.nodes.at[w.agent].set(node_new, mode="drop"),
         rho2=state.rho2.at[w.rho_gidx].set(rho_commit, mode="drop"),
@@ -324,18 +374,32 @@ def _wave_step(
 
 def rfast_wavefront_scan(
     topo: Topology | CommPlan,
-    grad_fn: GradFn,
+    grad_fn: Objective,
     gamma: float,
     *,
     donate: bool = True,
+    impl: str = "jnp",
+    interpret: bool | None = None,
 ):
     """Wavefront engine: a jitted ``(packed, wave_inputs) -> packed`` where
     ``wave_inputs`` is a :class:`_WaveInputs` of ``(n_waves, B, ...)``
     lane arrays from a :class:`~repro.core.schedule.WavefrontPlan`.  The
     state is donated by default (the histories update in place; callers
-    rebind)."""
+    rebind).
+
+    ``impl="pallas"`` commits each lane through the fused
+    ``kernels/rfast_update`` commit kernel on the flat parameter buffer
+    (``interpret`` defaults to True off-TPU, matching the protocol
+    round's convention); ``impl="jnp"`` is the scatter/gather path.
+    """
+    if impl not in ("jnp", "pallas"):
+        raise ValueError(f"impl must be 'jnp' or 'pallas', got {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grad_fn = as_grad_fn(grad_fn)
     plan = as_comm_plan(topo)
-    step = partial(_wave_step, grad_fn=grad_fn, gamma=gamma, ko=plan.ko)
+    step = partial(_wave_step, grad_fn=grad_fn, gamma=gamma, ko=plan.ko,
+                   impl=impl, interpret=interpret)
 
     def run_waves(state: PackedState, waves: _WaveInputs):
         state, _ = jax.lax.scan(step, state, waves)
@@ -368,7 +432,7 @@ def tracked_mass(state: RFASTState) -> jnp.ndarray:
 def run_rfast(
     topo: Topology,
     schedule: Schedule,
-    grad_fn: GradFn,
+    grad_fn: Objective,
     x0: jnp.ndarray,
     gamma: float,
     *,
@@ -376,14 +440,36 @@ def run_rfast(
     eval_every: int = 0,
     eval_fn: Callable[[RFASTState, float], dict] | None = None,
     mode: str = "wavefront",
+    impl: str = "jnp",
+    state0: RFASTState | None = None,
+    chunk_cb: Callable[[RFASTState, int], None] | None = None,
 ) -> tuple[RFASTState, list[dict]]:
     """Run the full schedule; optionally evaluate every ``eval_every`` events.
+
+    ``grad_fn`` may be the raw traced callable or any
+    :class:`~repro.core.paramvec.GradProvider` (``LogisticProblem``,
+    ``LMProblem``, ...) — the engines are objective-agnostic over the
+    flat-parameter substrate.
 
     ``mode="wavefront"`` (default) runs the batched engine with delta
     histories; ``mode="event"`` the one-event-per-step snapshot engine.
     Both realize identical Algorithm-2 semantics (tested to fp32
     tolerance); final ``v_hist``/``rho_hist`` *contents* differ by
-    representation.
+    representation.  ``impl="pallas"`` (wavefront only) commits lanes
+    through the fused ``rfast_commit`` kernel.
+
+    Checkpoint/resume: ``chunk_cb(state, k)`` fires after every eval
+    chunk with the (unpacked) state at event ``k`` — persist it with
+    ``checkpoint.save_checkpoint`` (which copies to host; the live
+    buffers are donated to the next chunk).  ``state0`` resumes from
+    such a state: ``state0.k`` must sit on an eval-chunk boundary of
+    the SAME schedule/seed AND the SAME ``mode`` it was saved from —
+    the two engines' ``v_hist``/``rho_hist`` *representations* differ
+    (wavefront: per-writer delta rows; event: full snapshots), the
+    shapes do not, so a cross-mode resume is not detectable here and
+    would silently realize a wrong trajectory.  The first ``state0.k``
+    events are skipped (the RNG key derivation is identical to the
+    fresh run, so a resumed run continues the exact trajectory).
 
     Both modes donate the running state between chunks (in-place
     updates): ``eval_fn`` must extract what it needs (floats/arrays of
@@ -391,11 +477,14 @@ def run_rfast(
     """
     if mode not in ("wavefront", "event"):
         raise ValueError(f"mode must be 'wavefront' or 'event', got {mode!r}")
+    if mode == "event" and impl != "jnp":
+        raise ValueError("impl='pallas' requires mode='wavefront' "
+                         "(the event engine is the jnp oracle)")
+    grad_fn = as_grad_fn(grad_fn)
     plan = as_comm_plan(topo)
     H = int(schedule.D) + 2
     key = jax.random.PRNGKey(seed)
     key, init_key = jax.random.split(key)
-    state = init_state(plan, x0, grad_fn, init_key, H)
 
     K = schedule.K
     step_keys = jax.random.split(key, K)
@@ -403,12 +492,30 @@ def run_rfast(
     if eval_every <= 0:
         eval_every = K
 
+    if state0 is None:
+        state = init_state(plan, x0, grad_fn, init_key, H)
+        k0 = 0
+    else:
+        if state0.v_hist.shape[0] != H:
+            raise ValueError(
+                f"state0 has H={state0.v_hist.shape[0]} but this schedule "
+                f"needs H={H} — resume only into the same schedule")
+        k0 = int(state0.k)
+        # k0 == K is a completed run (its K need not be chunk-aligned)
+        if k0 < K and k0 % eval_every != 0:
+            raise ValueError(f"state0.k={k0} is not an eval-chunk boundary "
+                             f"(eval_every={eval_every})")
+        # copy: the engines donate their state buffers in place
+        state = jax.tree.map(jnp.array, state0)
+    if k0 >= K:
+        return state, metrics
+
     if mode == "event":
         chunk = rfast_scan(plan, grad_fn, gamma, H, donate=True)
         agent = jnp.asarray(schedule.agent)
         stamp_v = jnp.asarray(schedule.stamp_v)
         stamp_rho = jnp.asarray(schedule.stamp_rho)
-        for s in range(0, K, eval_every):
+        for s in range(k0, K, eval_every):
             e = min(K, s + eval_every)
             state = chunk(state, agent[s:e], stamp_v[s:e], stamp_rho[s:e],
                           step_keys[s:e])
@@ -416,10 +523,13 @@ def run_rfast(
                 m = eval_fn(state, float(schedule.times[e - 1]))
                 m["k"] = e
                 metrics.append(m)
+            if chunk_cb is not None:
+                chunk_cb(state, e)       # event engine tracks k == e itself
         return state, metrics
 
     wf = build_wavefront_plan(schedule, plan, H, break_every=eval_every)
-    runner = rfast_wavefront_scan(plan, grad_fn, gamma, donate=True)
+    runner = rfast_wavefront_scan(plan, grad_fn, gamma, donate=True,
+                                  impl=impl)
     waves = wave_inputs(wf, step_keys)
     packed = pack_state(state)
 
@@ -429,8 +539,10 @@ def run_rfast(
               for s in range(0, K, eval_every)] + [wf.n_waves]
     cmax = max(b1 - b0 for b0, b1 in zip(bounds, bounds[1:]))
     n_pad = plan.n
+    skip = k0 // eval_every          # chunks already realized in state0
 
-    for ci, (w0, w1) in enumerate(zip(bounds, bounds[1:])):
+    for ci, (w0, w1) in enumerate(zip(bounds[skip:], bounds[skip + 1:]),
+                                  start=skip):
         pad = cmax - (w1 - w0)
 
         def sl(arr, fill):
@@ -454,4 +566,6 @@ def run_rfast(
             m = eval_fn(unpack_state(packed, e), float(schedule.times[e - 1]))
             m["k"] = e
             metrics.append(m)
+        if chunk_cb is not None:
+            chunk_cb(unpack_state(packed, e), e)
     return unpack_state(packed, K), metrics

@@ -1,2 +1,4 @@
 from .synthetic import logistic_dataset, partition, token_stream  # noqa: F401
-from .objectives import LogisticProblem, make_logistic_problem  # noqa: F401
+from .objectives import (  # noqa: F401
+    LogisticProblem, make_logistic_problem, LMProblem, make_lm_problem,
+)

@@ -1,16 +1,31 @@
 """End-to-end R-FAST training driver (CPU-runnable at reduced scale).
 
-Trains an LM with the R-FAST protocol wrapping per-node AdamW-free SGD on
-the tracked direction, over a selectable topology, with checkpointing and
-(optionally) simulated packet loss.
+Trains an LM with the R-FAST protocol over a selectable topology, with
+checkpointing, in one of two execution regimes:
+
+* **synchronous rounds** (default) — the production SPMD runtime
+  (``core/runtime.py``): every round runs S1–S5 for all nodes, optional
+  Bernoulli per-edge loss masks (``--loss-prob``).
+* **fully asynchronous** (``--scenario <name>``) — the paper's actual
+  regime: a :class:`~repro.core.scenario.NetworkScenario` (stragglers,
+  latency, loss bursts, crash/recovery) is realized into a per-event
+  trace, and the reduced LM trains through the wavefront simulator
+  engine on the flat-parameter substrate (``core/paramvec.py``): the
+  model pytree rides the engines as one ``(p,)`` lane per node, with
+  per-event stale reads and send outcomes.  ``--steps N`` means N
+  activations per node (K = N·nodes events).  Checkpoints hold the
+  packed flat state and resume mid-schedule.
 
     PYTHONPATH=src python -m repro.launch.train \
         --arch rfast-100m --reduced --nodes 4 --steps 200 --topology binary_tree
 
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch rfast-100m --reduced --nodes 4 --steps 200 --scenario straggler
+
 ``--impl pallas`` commits the protocol state through the fused
-``kernels/rfast_update`` Pallas kernel (interpret mode off-TPU); the
-default ``--impl jnp`` is the GSPMD dense-mixing path.  Both are the same
-protocol (core/protocol.py) over the same CommPlan.
+``kernels/rfast_update`` Pallas kernel (interpret mode off-TPU) in both
+regimes; the default ``--impl jnp`` is the dense/scatter path.  Both are
+the same protocol (core/protocol.py) over the same CommPlan.
 """
 from __future__ import annotations
 
@@ -26,13 +41,16 @@ from repro.metrics import MetricsLogger, StepTimer
 from repro.configs import ARCHS, get_config
 from repro.core.protocol import IMPLS
 from repro.core.runtime import edge_arrays, init_node_state, make_rfast_round
+from repro.core.scenario import SCENARIOS, get_scenario
+from repro.core.simulator import run_rfast, zeros_state
 from repro.core.topology import get_topology
+from repro.data.objectives import make_lm_problem
 from repro.data.pipeline import LMShardConfig, node_batch
 from repro.models.transformer import init_params, loss_fn
 from repro.optim.schedules import warmup_cosine
 
 
-def main() -> None:
+def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rfast-100m", choices=ARCHS)
     ap.add_argument("--reduced", action="store_true",
@@ -45,6 +63,11 @@ def main() -> None:
     ap.add_argument("--gamma", type=float, default=3e-3)
     ap.add_argument("--momentum", type=float, default=0.0)
     ap.add_argument("--loss-prob", type=float, default=0.0)
+    ap.add_argument("--scenario", default="", metavar="NAME",
+                    help="train asynchronously under a named "
+                         f"NetworkScenario ({', '.join(sorted(SCENARIOS))}) "
+                         "through the wavefront engine; default: "
+                         "synchronous rounds")
     ap.add_argument("--impl", default="jnp", choices=IMPLS,
                     help="protocol backend: jnp (dense GSPMD mixing) or "
                          "pallas (fused update kernel)")
@@ -53,11 +76,28 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.scenario:
+        if args.loss_prob:
+            ap.error("--loss-prob models loss in the synchronous rounds; "
+                     "with --scenario the NetworkScenario owns the "
+                     "loss/delay model")
+        if args.momentum:
+            ap.error("--momentum applies to the synchronous round engine "
+                     "only; the event-level Algorithm 2 recursion has no "
+                     "momentum term")
+        return _train_async(args, cfg)
+    return _train_sync(args, cfg)
+
+
+# --------------------------------------------------------------------- #
+# synchronous rounds (production SPMD runtime)
+# --------------------------------------------------------------------- #
+def _train_sync(args, cfg) -> dict:
     n = args.nodes
     topo = get_topology(args.topology, n)
     spec = edge_arrays(topo)
@@ -72,10 +112,9 @@ def main() -> None:
             lambda p: loss_fn(cfg, p, toks, labels))(params)
 
     def batches_at(step: int):
-        toks = np.stack([node_batch(shard_cfg, i, step)[0] for i in range(n)])
-        labels = np.stack([node_batch(shard_cfg, i, step)[1]
-                           for i in range(n)])
-        return jnp.asarray(toks), jnp.asarray(labels)
+        toks, labels = zip(*(node_batch(shard_cfg, i, step)
+                             for i in range(n)))
+        return jnp.asarray(np.stack(toks)), jnp.asarray(np.stack(labels))
 
     gamma = warmup_cosine(args.gamma, warmup=max(1, args.steps // 20),
                           total=args.steps)
@@ -105,6 +144,7 @@ def main() -> None:
     logger = MetricsLogger(args.metrics) if args.metrics else None
     timer = StepTimer()
     t0 = time.time()
+    losses: list[float] = []
     for step in range(start, args.steps):
         masks = None
         if robust:
@@ -117,8 +157,10 @@ def main() -> None:
         if logger:
             logger.log(step + 1, loss=metrics["loss"],
                        sps=timer.steps_per_sec)
-        if (step + 1) % args.log_every == 0:
+        if (step == start or (step + 1) % args.log_every == 0
+                or step + 1 == args.steps):
             l = float(metrics["loss"])
+            losses.append(l)
             dt = time.time() - t0
             print(f"step {step+1:5d} loss {l:.4f} "
                   f"({dt:.1f}s, {timer.steps_per_sec:.2f} it/s)", flush=True)
@@ -127,6 +169,88 @@ def main() -> None:
     if logger:
         logger.close()
     print("done")
+    return {"mode": "sync", "losses": losses, "steps": args.steps}
+
+
+# --------------------------------------------------------------------- #
+# fully asynchronous (scenario trace through the wavefront engine)
+# --------------------------------------------------------------------- #
+def _train_async(args, cfg) -> dict:
+    n = args.nodes
+    topo = get_topology(args.topology, n)
+    prob = make_lm_problem(cfg, n, batch_per_node=args.batch_per_node,
+                           seq_len=args.seq, seed=args.seed)
+    sc = get_scenario(args.scenario, n)
+    K = args.steps * n
+    trace = sc.realize(topo, K, seed=args.seed)
+    sched = trace.schedule
+    # delivered fraction over *attempted* sends (the active agent's
+    # out-edges per event), not over the all-False inactive rows
+    outdeg = np.zeros((2, n))
+    for g, edges in enumerate((topo.edges_W(), topo.edges_A())):
+        for (j, _i) in edges:
+            outdeg[g, j] += 1
+    attempts = outdeg[:, sched.agent].sum()
+    delivered = float((trace.send_ok_w.sum() + trace.send_ok_a.sum())
+                      / max(1.0, attempts))
+    print(f"arch={cfg.name} p={prob.p} ({prob.spec.p_model} model) "
+          f"nodes={n} topo={topo.name} scenario={args.scenario} "
+          f"K={K} D={sched.D} T={sched.T} "
+          f"send_ok={delivered:.2f} impl={args.impl}")
+
+    x0 = prob.x0_flat
+    # chunk (= eval/ckpt) boundaries: log_every activations per node
+    eval_every = max(n, min(K, args.log_every * n))
+    save_every_chunks = max(1, args.ckpt_every // max(1, args.log_every))
+
+    state0 = None
+    if args.ckpt and latest_step(args.ckpt) is not None:
+        template = zeros_state(topo, prob.p, int(sched.D) + 2)
+        state0 = load_checkpoint(args.ckpt, template)
+        print(f"resumed from event {int(state0.k)}/{K}")
+
+    logger = MetricsLogger(args.metrics) if args.metrics else None
+    timer = StepTimer()
+    t0 = time.time()
+    losses: list[float] = [float(prob.mean_loss(x0))]
+    print(f"event {0:6d} loss {losses[0]:.4f} (init)", flush=True)
+
+    def eval_fn(state, t):
+        l = float(prob.mean_loss(state.x.mean(0)))
+        return {"loss": l, "t": t}
+
+    def chunk_cb(state, k):
+        timer.tick()
+        if logger:
+            logger.log(k, loss=losses[-1], sps=timer.steps_per_sec)
+        if args.ckpt and (k >= K
+                          or (k // eval_every) % save_every_chunks == 0):
+            save_checkpoint(args.ckpt, k, state)
+
+    k0 = int(state0.k) if state0 is not None else 0
+    def eval_and_log(state, t):
+        m = eval_fn(state, t)
+        losses.append(m["loss"])
+        ev = min(K, k0 + (len(losses) - 1) * eval_every)
+        dt = time.time() - t0
+        print(f"event {ev:6d} loss {m['loss']:.4f} "
+              f"vtime {t:8.1f} ({dt:.1f}s)", flush=True)
+        return m
+
+    state, _ = run_rfast(
+        topo, sched, prob, jnp.tile(x0[None], (n, 1)), args.gamma,
+        seed=args.seed, eval_every=eval_every, eval_fn=eval_and_log,
+        mode="wavefront", impl=args.impl, state0=state0, chunk_cb=chunk_cb)
+    if logger:
+        logger.close()
+    if len(losses) > 1:
+        print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+              f"over {K} events ({float(sched.times[-1]):.1f} vtime)")
+    else:
+        print("done (schedule already complete)")
+    return {"mode": "async", "scenario": args.scenario,
+            "losses": losses, "events": K,
+            "vtime": float(sched.times[-1]), "send_ok": delivered}
 
 
 if __name__ == "__main__":

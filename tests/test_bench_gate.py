@@ -47,6 +47,19 @@ def test_gate_passes_clean_run(tmp_path):
     assert bench_run._compare(records, base, 0.25) == []
 
 
+def test_gate_ignores_intentional_nan_rows(tmp_path):
+    """Correctness-only rows record nan us by design (e.g.
+    kernels/protocol/round_jnp_vs_pallas with derived maxerr=...) — only
+    rows whose derived starts with ERROR: gate as errored."""
+    base = _write_baseline(tmp_path, [
+        _row("kernels", "check", None, "maxerr=0.0e+00")])
+    records = [_row("kernels", "check", None, "maxerr=0.0e+00")]
+    assert bench_run._compare(records, base, 0.25) == []
+    records = [_row("kernels", "check", None, "ERROR:Boom:bad")]
+    probs = bench_run._compare(records, base, 0.25)
+    assert [p["problem"] for p in probs] == ["errored"]
+
+
 def test_gate_skips_missing_check_when_run_meta_differs(tmp_path):
     """--impl / --quick subsets legitimately drop rows the baseline has
     (e.g. the jnp rows of a both-impls kernels baseline): the missing

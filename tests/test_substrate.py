@@ -9,6 +9,7 @@ import pytest
 from repro.checkpoint import load_checkpoint, latest_step, save_checkpoint
 from repro.data.pipeline import LMShardConfig, node_batch
 from repro.optim import adamw, constant, cosine, momentum, sgd, step_decay, warmup_cosine
+from tests.test_simulator import quad_grad_fn
 
 
 def _params():
@@ -55,6 +56,95 @@ def test_checkpoint_structure_mismatch(tmp_path):
     save_checkpoint(d, 1, _params())
     with pytest.raises(ValueError):
         load_checkpoint(d, {"other": jnp.zeros(1)})
+
+
+def test_checkpoint_roundtrip_protocol_state(tmp_path):
+    """ProtocolState (the sync runtime's pytree) survives save/load
+    bit-identically, step included."""
+    from repro.core import directed_ring
+    from repro.core.plan import build_comm_plan
+    from repro.core.runtime import init_node_state, make_rfast_round
+    n, p = 4, 6
+    plan = build_comm_plan(directed_ring(n))
+    C = jnp.asarray(np.random.default_rng(0).normal(0, 1, (n, p)),
+                    jnp.float32)
+
+    def grad_fn(params, batch, key):
+        del key
+        d = params["w"] - batch
+        return 0.5 * jnp.sum(d * d), {"w": d}
+
+    key = jax.random.PRNGKey(0)
+    state = init_node_state(plan, {"w": jnp.zeros((p,), jnp.float32)},
+                            grad_fn, C, key, robust=True)
+    rf = jax.jit(make_rfast_round(plan, grad_fn, gamma=0.05, robust=True))
+    for _ in range(3):
+        state, _ = rf(state, C, jax.random.split(key, n), None)
+
+    d = str(tmp_path / "proto")
+    save_checkpoint(d, int(state.step), state)
+    assert latest_step(d) == 3
+    back = load_checkpoint(d, state)
+    for name, a, b in zip(state._fields, state, back):
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                          err_msg=name)
+    assert int(back.step) == 3
+
+
+def test_checkpoint_roundtrip_flat_substrate_resumes(tmp_path):
+    """RFASTState (the packed flat-substrate state) round-trips through
+    ckpt.py bit-identically AND a resumed run continues the exact
+    trajectory from the saved event."""
+    from repro.core import binary_tree, generate_schedule, run_rfast
+    from repro.core.simulator import RFASTState
+    n, p, K, half = 5, 6, 240, 120
+    topo = binary_tree(n)
+    gfn, _ = quad_grad_fn(n, p, noise=0.1)
+    sched = generate_schedule(topo, K, loss_prob=0.1, latency=0.5, seed=1)
+    x0 = jnp.zeros((n, p), jnp.float32)
+    d = str(tmp_path / "flat")
+
+    def cb(state, k):
+        if k == half:
+            save_checkpoint(d, k, state)
+
+    full, _ = run_rfast(topo, sched, gfn, x0, 0.02, mode="wavefront",
+                        eval_every=half, chunk_cb=cb)
+    assert latest_step(d) == half
+
+    # bit-identical round-trip (template only supplies the structure —
+    # the same zeros_state recipe launch/train.py uses to resume)
+    from repro.core.simulator import zeros_state
+    template = zeros_state(topo, p, int(sched.D) + 2)
+    mid = load_checkpoint(d, template)
+    assert int(mid.k) == half
+    save_checkpoint(d, half, mid)          # idempotent re-save
+    again = load_checkpoint(d, template, step=half)
+    for name, a, b in zip(RFASTState._fields, mid, again):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+    # resume at the right step: identical final state vs the full run
+    resumed, _ = run_rfast(topo, sched, gfn, x0, 0.02, mode="wavefront",
+                           eval_every=half,
+                           state0=jax.tree.map(jnp.asarray, mid))
+    for name, a, b in zip(RFASTState._fields, resumed, full):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6, err_msg=name)
+    # resuming off a chunk boundary is refused
+    bad = jax.tree.map(jnp.asarray, mid)._replace(
+        k=jnp.asarray(half - 1, jnp.int32))
+    with pytest.raises(ValueError):
+        run_rfast(topo, sched, gfn, x0, 0.02, mode="wavefront",
+                  eval_every=half, state0=bad)
+    # a COMPLETED run resumes as a no-op even when K is not a multiple
+    # of eval_every (the final chunk is short)
+    done = jax.tree.map(jnp.asarray, full)
+    assert K % 100 != 0
+    out, ms = run_rfast(topo, sched, gfn, x0, 0.02, mode="wavefront",
+                        eval_every=100, state0=done)
+    assert int(out.k) == K and ms == []
 
 
 def test_node_batches_disjoint_and_deterministic():

@@ -129,6 +129,32 @@ def test_wavefront_deterministic_round_robin():
                                rtol=2e-5, atol=2e-5)
 
 
+def test_wavefront_pallas_commit_matches_jnp():
+    """impl="pallas" (lanes committed through the fused rfast_commit
+    kernel on the flat buffer) realizes the same trajectory as the jnp
+    scatter path and the event oracle."""
+    n, p, K = 7, 6, 250
+    topo = binary_tree(n)
+    gfn = quad_grad_fn(n, p)
+    sched = generate_schedule(topo, K, loss_prob=0.15, latency=0.5, seed=4)
+    x0 = jnp.zeros((n, p), jnp.float32)
+    s_j, _ = run_rfast(topo, sched, gfn, x0, 0.02, mode="wavefront",
+                       eval_every=100)
+    s_p, _ = run_rfast(topo, sched, gfn, x0, 0.02, mode="wavefront",
+                       eval_every=100, impl="pallas")
+    s_e, _ = run_rfast(topo, sched, gfn, x0, 0.02, mode="event")
+    for f in ("x", "v", "z", "g_prev", "rho", "rho_buf"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(s_p, f)), np.asarray(getattr(s_j, f)),
+            rtol=2e-5, atol=2e-5, err_msg=f"pallas vs jnp: {f}")
+        np.testing.assert_allclose(
+            np.asarray(getattr(s_p, f)), np.asarray(getattr(s_e, f)),
+            rtol=2e-5, atol=2e-5, err_msg=f"pallas vs event: {f}")
+    # the event oracle rejects the kernel backend explicitly
+    with pytest.raises(ValueError):
+        run_rfast(topo, sched, gfn, x0, 0.02, mode="event", impl="pallas")
+
+
 # ------------------------------------------------------------------ #
 # commit-only kernel vs full kernel
 # ------------------------------------------------------------------ #
