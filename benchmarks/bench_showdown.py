@@ -4,6 +4,12 @@ algorithm on the SAME :class:`~repro.core.scenario.NetworkScenario`
 virtual clock — identical stragglers, latency, loss bursts, and
 crash/recovery windows, so the comparison is apples-to-apples.
 
+Every time-to-loss row is a MULTI-SEED MEDIAN (the paper's claims are
+statistical — AD-PSGD and the Assran et al. survey report the same way):
+R-FAST runs its seeds as one fleet through the sweep engine
+(``run_sweep``: one compiled program, one lane per seed), the baselines
+loop their host-driven runs over the same seeds.
+
 Two workload families:
 
 * ``showdown/<scenario>/<algo>`` — the paper's §VI logistic regression.
@@ -12,8 +18,9 @@ Two workload families:
   wavefront engine over the scenario's event clock, the synchronous
   baselines consume the same flat ``grad_fn`` under the barrier clock.
 
-Row derived fields: ``vtime=<time-to-target-loss>;acc=<final>``
-(+ ``loss=<final>`` for lm rows) ``;ratio=<vtime/vtime_rfast>``.
+Row derived fields: ``vtime=<median-time-to-target>;acc=<median-final>``
+(+ ``loss=<median-final>`` for lm rows) ``;seeds=<count>``
+``;ratio=<vtime/vtime_rfast>``.
 """
 from __future__ import annotations
 
@@ -26,14 +33,46 @@ from repro.core.baselines import (run_adpsgd, run_dpsgd, run_osgp,
                                   run_ring_allreduce, run_sab)
 from repro.data import make_lm_problem
 from .common import (csv_row, eval_fn_for, logistic_setup,
-                     run_rfast_problem, stopwatch, time_to_loss)
+                     run_sweep_problem, stopwatch, time_to_loss)
 
 SCENARIO_NAMES = ("straggler", "packet_loss", "crash_recovery")
+SEEDS = (0, 1, 2)
+
+
+def _emit(rows, key, wall, calls, vts, finals, t_ref=None):
+    """One median row: vts/finals are per-seed crossing times and final
+    metric dicts; ``calls`` the fleet-wide event/round count the wall
+    time amortizes over."""
+    t = float(np.median(vts))
+    derived = f"vtime={t:.1f}"
+    for field in ("loss", "acc"):
+        if field in finals[0]:
+            derived += (f";{field}="
+                        f"{float(np.median([m[field] for m in finals])):.3f}")
+    derived += f";seeds={len(vts)}"
+    if t_ref is not None:
+        derived += (f";ratio={t / t_ref:.2f}"
+                    if np.isfinite(t) and np.isfinite(t_ref) and t_ref > 0
+                    else ";ratio=inf")
+    rows.append(csv_row(key, wall / calls * 1e6, derived))
+    return t
+
+
+def _baseline_median(fn, args, sc, seeds, eval_fn, ev):
+    """Per-seed host runs of one baseline; returns (wall, vts, finals)."""
+    vts_raw, finals = [], []
+    with stopwatch() as sw:
+        for sd in seeds:
+            _, ms = fn(*args, scenario=sc, seed=sd, eval_fn=eval_fn,
+                       eval_every=ev)
+            vts_raw.append(ms)
+            finals.append(ms[-1])
+    return sw["s"], vts_raw, finals
 
 
 def run(target: float = 0.35, n: int = 8, rounds: int = 1000,
         gamma: float = 5e-3, scenarios: tuple[str, ...] = SCENARIO_NAMES,
-        ) -> list[str]:
+        seeds: tuple[int, ...] = SEEDS) -> list[str]:
     rows = []
     prob = logistic_setup(n)
     gfn = prob.grad_fn()
@@ -46,23 +85,15 @@ def run(target: float = 0.35, n: int = 8, rounds: int = 1000,
     for sc_name in scenarios:
         sc = get_scenario(sc_name, n)
 
-        def emit(name, wall, per, ms, t_ref=None):
-            t = time_to_loss(ms, target)
-            ratio = ""
-            if t_ref is not None:
-                ratio = (f";ratio={t / t_ref:.2f}"
-                         if np.isfinite(t) and np.isfinite(t_ref)
-                         and t_ref > 0 else ";ratio=inf")
-            rows.append(csv_row(
-                f"showdown/{sc_name}/{name}", wall / per * 1e6,
-                f"vtime={t:.1f};acc={ms[-1]['acc']:.3f}{ratio}"))
-            return t
-
-        # --- R-FAST (async, the scenario's event clock) ----------------
-        _, ms, wall = run_rfast_problem(prob, "binary_tree", K,
-                                        gamma=gamma, scenario=sc,
-                                        eval_every=max(200, K // 40))
-        t_rfast = emit("R-FAST", wall, K, ms)
+        # --- R-FAST (async, one fleet lane per seed) -------------------
+        _, ms_lanes, wall = run_sweep_problem(prob, "binary_tree", K,
+                                              gamma=gamma, scenario=sc,
+                                              seeds=seeds,
+                                              eval_every=max(200, K // 40))
+        t_rfast = _emit(rows, f"showdown/{sc_name}/R-FAST",
+                        wall, K * len(seeds),
+                        [time_to_loss(ms, target) for ms in ms_lanes],
+                        [ms[-1] for ms in ms_lanes])
 
         # --- synchronous baselines (the scenario's barrier clock) ------
         ev = max(10, rounds // 40)
@@ -72,24 +103,29 @@ def run(target: float = 0.35, n: int = 8, rounds: int = 1000,
             ("D-PSGD", run_dpsgd, (topo_u, gfn, x0, gamma, rounds)),
             ("S-AB", run_sab, (topo_d, gfn, x0, gamma, rounds)),
         ):
-            with stopwatch() as sw:
-                _, ms = fn(*args, scenario=sc, eval_fn=eval_fn,
-                           eval_every=ev)
-            emit(name, sw["s"], rounds, ms, t_rfast)
+            wall, ms_seeds, finals = _baseline_median(fn, args, sc, seeds,
+                                                      eval_fn, ev)
+            _emit(rows, f"showdown/{sc_name}/{name}",
+                  wall, rounds * len(seeds),
+                  [time_to_loss(ms, target) for ms in ms_seeds],
+                  finals, t_rfast)
 
         # --- asynchronous baselines (same event clock) ------------------
         for name, fn, topo in (("AD-PSGD", run_adpsgd, topo_u),
                                ("OSGP", run_osgp, topo_d)):
-            with stopwatch() as sw:
-                _, ms = fn(topo, gfn, x0, gamma, K, scenario=sc,
-                           eval_fn=eval_fn, eval_every=max(200, K // 40))
-            emit(name, sw["s"], K, ms, t_rfast)
+            wall, ms_seeds, finals = _baseline_median(
+                fn, (topo, gfn, x0, gamma, K), sc, seeds, eval_fn,
+                max(200, K // 40))
+            _emit(rows, f"showdown/{sc_name}/{name}",
+                  wall, K * len(seeds),
+                  [time_to_loss(ms, target) for ms in ms_seeds],
+                  finals, t_rfast)
     return rows
 
 
 def run_lm(drop: float = 1.4, n: int = 4, rounds: int = 120,
            gamma: float = 2e-2, scenarios: tuple[str, ...] = SCENARIO_NAMES,
-           ) -> list[str]:
+           seeds: tuple[int, ...] = SEEDS) -> list[str]:
     """``lm/<scenario>/<algo>`` time-to-loss rows on the reduced LM.
 
     Every algorithm starts from the same init and consumes the same
@@ -98,7 +134,8 @@ def run_lm(drop: float = 1.4, n: int = 4, rounds: int = 120,
     marginal leaves real headroom below the uniform floor).  ``drop``
     must put the target well below the first few rounds' loss and every
     algorithm is evaluated every (equivalent-)round, so the vtime
-    columns measure crossing times, not eval cadence.
+    columns measure crossing times, not eval cadence.  R-FAST's seeds
+    run as one sweep fleet; the sync trio loops the same seeds.
     """
     cfg = get_config("rfast-100m").reduced(max_d_model=64, vocab=128)
     prob = make_lm_problem(cfg, n, batch_per_node=4, seq_len=32,
@@ -116,37 +153,28 @@ def run_lm(drop: float = 1.4, n: int = 4, rounds: int = 120,
     for sc_name in scenarios:
         sc = get_scenario(sc_name, n)
 
-        def emit(name, wall, per, ms, t_ref=None):
-            t = time_to_loss(ms, target)
-            ratio = ""
-            if t_ref is not None:
-                ratio = (f";ratio={t / t_ref:.2f}"
-                         if np.isfinite(t) and np.isfinite(t_ref)
-                         and t_ref > 0 else ";ratio=inf")
-            rows.append(csv_row(
-                f"lm/{sc_name}/{name}", wall / per * 1e6,
-                f"vtime={t:.1f};loss={ms[-1]['loss']:.3f};"
-                f"acc={ms[-1]['acc']:.3f}{ratio}"))
-            return t
-
-        # --- R-FAST (async: the wavefront engine on the event clock) ---
-        _, ms, wall = run_rfast_problem(prob, "binary_tree", K,
-                                        gamma=gamma, scenario=sc,
-                                        eval_every=n)
-        t_rfast = emit("R-FAST", wall, K, ms)
+        # --- R-FAST (async: the sweep engine on the event clock) -------
+        _, ms_lanes, wall = run_sweep_problem(prob, "binary_tree", K,
+                                              gamma=gamma, scenario=sc,
+                                              seeds=seeds, eval_every=n)
+        t_rfast = _emit(rows, f"lm/{sc_name}/R-FAST",
+                        wall, K * len(seeds),
+                        [time_to_loss(ms, target) for ms in ms_lanes],
+                        [ms[-1] for ms in ms_lanes])
 
         # --- synchronous baselines (the scenario's barrier clock) ------
-        ev = 1
         for name, fn, args in (
             ("Ring-AllReduce", run_ring_allreduce,
              (n, gfn, prob.x0_flat, gamma, rounds)),
             ("D-PSGD", run_dpsgd, (topo_u, gfn, x0, gamma, rounds)),
             ("S-AB", run_sab, (topo_d, gfn, x0, gamma, rounds)),
         ):
-            with stopwatch() as sw:
-                _, ms = fn(*args, scenario=sc, eval_fn=eval_fn,
-                           eval_every=ev)
-            emit(name, sw["s"], rounds, ms, t_rfast)
+            wall, ms_seeds, finals = _baseline_median(fn, args, sc, seeds,
+                                                      eval_fn, 1)
+            _emit(rows, f"lm/{sc_name}/{name}",
+                  wall, rounds * len(seeds),
+                  [time_to_loss(ms, target) for ms in ms_seeds],
+                  finals, t_rfast)
     return rows
 
 

@@ -1,0 +1,110 @@
+"""Fleet-lane sweep engine throughput: S independent experiments as ONE
+compiled wavefront program (``run_sweep``) vs S sequential ``run_rfast``
+calls — the compile is paid once and the per-wave math batches
+``(S, B, p)``, which is what makes multi-seed rows affordable everywhere
+else in the suite (see DESIGN.md §9).
+
+Rows:
+
+* ``sweep/seq_n<n>_S<S>``   — S sequential runs (per-event µs across the
+  whole fleet; what a seed loop costs today).
+* ``sweep/fleet_n<n>_S<S>`` — the same fleet through ``run_sweep``;
+  derived carries the headline ``speedup_vs_sequential`` and the max
+  per-lane deviation from the individual runs (a free correctness spot
+  check on real benchmark traffic).
+* ``sweep/mixed_n<n>_S<S>`` — a (topology × scenario) fleet, exercising
+  degree padding and the ρ-layout remap across heterogeneous lanes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (get_scenario, get_topology, realize_batch,
+                        run_rfast, run_sweep)
+from .common import csv_row, logistic_setup, stopwatch
+
+
+def _median_wall(fn, reps: int = 3) -> float:
+    """Median wall seconds over ``reps`` calls.  Unlike measure_us there
+    is NO separated warmup: the one-time compile is the point of the
+    comparison (a seed loop pays it per run, the fleet once per call) —
+    the median only guards against scheduler hiccups."""
+    walls = []
+    for _ in range(max(1, reps)):
+        with stopwatch() as sw:
+            fn()
+        walls.append(sw["s"])
+    return float(np.median(walls))
+
+
+def run(S: int = 8, n: int = 7, K: int = 2000,
+        gamma: float = 5e-3) -> list[str]:
+    rows = []
+    prob = logistic_setup(n)
+    topo = get_topology("binary_tree", n)
+    traces = realize_batch(topo, K, scenario=get_scenario("uniform", n),
+                           seeds=range(S))
+    scheds = [t.schedule for t in traces]
+    x0 = jnp.zeros((n, prob.p), jnp.float32)
+
+    # --- S sequential run_rfast calls (the pre-sweep seed loop) --------
+    finals = []
+
+    def sequential():
+        finals.clear()
+        for s, sched in enumerate(scheds):
+            st, _ = run_rfast(topo, sched, prob, x0, gamma, seed=s)
+            jax.block_until_ready(st.x)
+            finals.append(np.asarray(st.x))
+
+    t_seq = _median_wall(sequential)
+    rows.append(csv_row(f"sweep/seq_n{n}_S{S}", t_seq / (S * K) * 1e6,
+                        f"engine=run_rfast_x{S};K={K}"))
+
+    # --- the same fleet as one compiled program ------------------------
+    last = {}
+
+    def fleet():
+        states, _ = run_sweep(topo, scheds, prob, x0, gamma,
+                              seeds=range(S))
+        jax.block_until_ready(states[-1].x)
+        last["states"] = states
+
+    t_fleet = _median_wall(fleet)
+    states = last["states"]
+    maxerr = max(float(np.abs(np.asarray(states[s].x) - finals[s]).max())
+                 for s in range(S))
+    rows.append(csv_row(f"sweep/fleet_n{n}_S{S}", t_fleet / (S * K) * 1e6,
+                        f"speedup_vs_sequential={t_seq / t_fleet:.2f}x;"
+                        f"lane_maxerr_vs_run_rfast={maxerr:.1e};K={K}"))
+
+    # --- heterogeneous fleet: 3 topologies x 2 scenarios ---------------
+    Km = max(200, K // 2)
+    lane_topos, lane_scheds, lane_seeds = [], [], []
+    for ti, tname in enumerate(("binary_tree", "directed_ring",
+                                "exponential")):
+        tp = get_topology(tname, n)
+        for si, scn in enumerate(("straggler", "packet_loss")):
+            seed = 10 * ti + si
+            tr = get_scenario(scn, n).realize(tp, Km, seed=seed)
+            lane_topos.append(tp)
+            lane_scheds.append(tr.schedule)
+            lane_seeds.append(seed)
+    Sm = len(lane_scheds)
+
+    def mixed():
+        sts, _ = run_sweep(lane_topos, lane_scheds, prob, x0, gamma,
+                           seeds=lane_seeds)
+        jax.block_until_ready(sts[-1].x)
+
+    t_mixed = _median_wall(mixed)
+    rows.append(csv_row(f"sweep/mixed_n{n}_S{Sm}",
+                        t_mixed / (Sm * Km) * 1e6,
+                        f"topologies=3;scenarios=2;K={Km}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import generate_schedule, get_topology, run_rfast
+from repro.core import (generate_schedule, get_topology, realize_batch,
+                        run_rfast, run_sweep)
 from repro.data import make_logistic_problem
 
 
@@ -76,13 +77,21 @@ def eval_fn_for(prob):
     return eval_fn
 
 
+def _x0_for(prob):
+    """Per-node start iterate: the provider's ``x0_flat`` when it has one
+    (real models start at their init), else the zero vector (the convex
+    objectives)."""
+    x0_flat = getattr(prob, "x0_flat", None)
+    if x0_flat is None:
+        return jnp.zeros((prob.n, prob.p), jnp.float32)
+    return jnp.tile(jnp.asarray(x0_flat, jnp.float32)[None], (prob.n, 1))
+
+
 def run_rfast_problem(prob, topo_name: str, K: int, *, gamma=5e-3,
                       scenario=None, compute_time=None, loss_prob=0.0,
                       seed=0, eval_every=500, mode="wavefront"):
-    """Run R-FAST on any GradProvider (LogisticProblem, LMProblem, ...).
-
-    x0 is the provider's ``x0_flat`` when it has one (real models start
-    at their init), else the zero vector (the convex objectives)."""
+    """Run R-FAST on any GradProvider (LogisticProblem, LMProblem, ...);
+    x0 comes from :func:`_x0_for`."""
     n = prob.n
     topo = get_topology(topo_name, n)
     if scenario is not None:
@@ -93,11 +102,7 @@ def run_rfast_problem(prob, topo_name: str, K: int, *, gamma=5e-3,
     else:
         sched = generate_schedule(topo, K, compute_time=compute_time,
                                   loss_prob=loss_prob, latency=0.3, seed=seed)
-    x0_flat = getattr(prob, "x0_flat", None)
-    if x0_flat is None:
-        x0 = jnp.zeros((n, prob.p), jnp.float32)
-    else:
-        x0 = jnp.tile(jnp.asarray(x0_flat, jnp.float32)[None], (n, 1))
+    x0 = _x0_for(prob)
     with stopwatch() as sw:
         state, metrics = run_rfast(topo, sched, prob, x0, gamma,
                                    eval_every=eval_every,
@@ -109,6 +114,29 @@ def run_rfast_problem(prob, topo_name: str, K: int, *, gamma=5e-3,
 
 # kept name: the logistic suites predate the substrate-generic runner
 run_rfast_logistic = run_rfast_problem
+
+
+def run_sweep_problem(prob, topo_name: str, K: int, *, scenario,
+                      gamma=5e-3, seeds=(0, 1, 2), eval_every=500,
+                      impl="jnp"):
+    """Run a fleet of seeds of one (problem, topology, scenario) through
+    the sweep engine: one compiled program, one seed per lane.
+
+    Returns ``(states, metrics_lanes, wall_s)`` with one final state and
+    one metrics list per seed — feed ``metrics_lanes`` through
+    :func:`time_to_loss` per lane and report the median."""
+    n = prob.n
+    topo = get_topology(topo_name, n)
+    traces = realize_batch(topo, K, scenario=scenario, seeds=seeds)
+    scheds = [t.schedule for t in traces]
+    x0 = _x0_for(prob)
+    with stopwatch() as sw:
+        states, metrics = run_sweep(topo, scheds, prob, x0, gamma,
+                                    seeds=list(seeds),
+                                    eval_every=eval_every,
+                                    eval_fn=eval_fn_for(prob), impl=impl)
+        jax.block_until_ready(states[-1].x)
+    return states, metrics, sw["s"]
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

@@ -10,7 +10,9 @@ from .topology import (  # noqa: F401
     undirected_ring, exponential, mesh2d, parameter_server, TOPOLOGIES,
     validate_weights, spanning_tree_roots, common_roots,
 )
-from .plan import CommPlan, build_comm_plan, matchings  # noqa: F401
+from .plan import (  # noqa: F401
+    CommPlan, build_comm_plan, pad_comm_plan, matchings,
+)
 from .paramvec import (  # noqa: F401
     RavelSpec, make_ravel_spec, ravel, unravel,
     GradProvider, ModelGradProvider, as_grad_fn,
@@ -20,12 +22,15 @@ from .protocol import (  # noqa: F401
     protocol_tracked_mass, descent_step, momentum_mix, consensus_mix,
     tracking_step, mailbox_merge, IMPLS,
 )
-from .schedule import Schedule, generate_schedule, round_robin_schedule  # noqa: F401
+from .schedule import (  # noqa: F401
+    Schedule, WavefrontPlan, build_wavefront_plan, pad_plan, stack_plans,
+    generate_schedule, round_robin_schedule,
+)
 from .scenario import (  # noqa: F401
     NetworkScenario, ScenarioTrace, GilbertElliott, EdgeChannels,
-    SCENARIOS, get_scenario,
+    SCENARIOS, get_scenario, realize_batch,
 )
 from .simulator import (  # noqa: F401
-    RFASTState, init_state, rfast_scan, run_rfast, tracked_mass,
+    RFASTState, init_state, rfast_scan, run_rfast, run_sweep, tracked_mass,
 )
 from . import baselines  # noqa: F401

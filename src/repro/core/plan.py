@@ -29,7 +29,8 @@ import numpy as np
 
 from .topology import Topology
 
-__all__ = ["CommPlan", "build_comm_plan", "as_comm_plan", "matchings"]
+__all__ = ["CommPlan", "build_comm_plan", "as_comm_plan", "pad_comm_plan",
+           "matchings"]
 
 
 def matchings(edges: list[tuple[int, int]]) -> list[list[tuple[int, int]]]:
@@ -110,6 +111,45 @@ def as_comm_plan(topo) -> "CommPlan":
     """Coerce a Topology-or-CommPlan argument to a CommPlan (engines
     accept either so a prebuilt plan is never re-derived)."""
     return topo if isinstance(topo, CommPlan) else build_comm_plan(topo)
+
+
+def pad_comm_plan(plan: CommPlan, *, kw: int | None = None,
+                  ka: int | None = None, ko: int | None = None) -> CommPlan:
+    """Degree-pad the per-node neighbour tables to common maxima.
+
+    CommPlans from different topologies (over the same ``n``) carry
+    different max in-/out-degrees ``(kw, ka, ko)``; padding them to a
+    shared maximum makes the WavefrontPlans built on top stackable into
+    dense ``(S, ...)`` fleet arrays.  Padded columns are inert by the
+    same argument as build_comm_plan's own degree padding: zero weight
+    and zero validity (so gathers contribute nothing) with edge
+    position / sender id 0 (so reads clamp harmlessly).  The dense edge
+    arrays, matching decomposition, and diagonals are untouched.
+    """
+    kw = plan.kw if kw is None else int(kw)
+    ka = plan.ka if ka is None else int(ka)
+    ko = plan.ko if ko is None else int(ko)
+    if kw < plan.kw or ka < plan.ka or ko < plan.ko:
+        raise ValueError(
+            f"cannot shrink degrees: have (kw={plan.kw}, ka={plan.ka}, "
+            f"ko={plan.ko}), asked for ({kw}, {ka}, {ko})")
+    if (kw, ka, ko) == (plan.kw, plan.ka, plan.ko):
+        return plan
+
+    def cols(a: np.ndarray, k: int) -> np.ndarray:
+        if a.shape[1] == k:
+            return a
+        return np.concatenate(
+            [a, np.zeros((a.shape[0], k - a.shape[1]), a.dtype)], axis=1)
+
+    return dataclasses.replace(
+        plan, kw=kw, ka=ka, ko=ko,
+        in_w_epos=cols(plan.in_w_epos, kw), in_w_src=cols(plan.in_w_src, kw),
+        in_w_wt=cols(plan.in_w_wt, kw),
+        in_a_epos=cols(plan.in_a_epos, ka), in_a_val=cols(plan.in_a_val, ka),
+        out_a_epos=cols(plan.out_a_epos, ko),
+        out_a_wt=cols(plan.out_a_wt, ko), out_a_val=cols(plan.out_a_val, ko),
+    )
 
 
 def _pack_dense(edges, M, e_pad):

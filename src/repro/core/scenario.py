@@ -41,7 +41,7 @@ from .topology import Topology
 
 __all__ = [
     "GilbertElliott", "EdgeChannels", "NetworkScenario", "ScenarioTrace",
-    "SCENARIOS", "get_scenario",
+    "SCENARIOS", "get_scenario", "realize_batch",
 ]
 
 
@@ -419,3 +419,31 @@ def get_scenario(name: str, n: int) -> NetworkScenario:
         raise KeyError(f"unknown scenario {name!r}; "
                        f"have {sorted(SCENARIOS)}")
     return SCENARIOS[name](n)
+
+
+def realize_batch(
+    topo: Topology, K: int, *,
+    scenario: NetworkScenario | str | None = None,
+    scenarios: Sequence[NetworkScenario | str] | None = None,
+    seeds: Sequence[int] = (0,),
+) -> list[ScenarioTrace]:
+    """Realize a fleet of independent :class:`ScenarioTrace` lanes.
+
+    Exactly one of ``scenario`` (one scenario × many seeds) or
+    ``scenarios`` (a sweep — e.g. names from the :data:`SCENARIOS`
+    registry — crossed with ``seeds``) must be given; strings resolve
+    through :func:`get_scenario` for ``topo.n``.  Lane order is
+    scenario-major, seed-minor.  Every lane shares ``topo`` and ``K``,
+    so the result feeds :func:`repro.core.simulator.run_sweep` directly
+    (lane ``i * len(seeds) + j`` carries scenario ``i``, seed
+    ``seeds[j]``); mixed-topology fleets realize per topology and
+    concatenate.
+    """
+    if (scenario is None) == (scenarios is None):
+        raise ValueError("pass exactly one of scenario= or scenarios=")
+    if scenario is not None:
+        scenarios = [scenario]
+    resolved = [get_scenario(sc, topo.n) if isinstance(sc, str) else sc
+                for sc in scenarios]
+    return [sc.realize(topo, K, seed=int(seed))
+            for sc in resolved for seed in seeds]

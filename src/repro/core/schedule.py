@@ -28,7 +28,8 @@ import numpy as np
 from .topology import Topology
 
 __all__ = ["Schedule", "WavefrontPlan", "build_wavefront_plan",
-           "generate_schedule", "round_robin_schedule"]
+           "pad_plan", "stack_plans", "slice_plan", "concat_plans",
+           "flatten_plans", "generate_schedule", "round_robin_schedule"]
 
 
 @dataclasses.dataclass
@@ -151,15 +152,27 @@ class WavefrontPlan:
     Every per-event table the device step needs is pre-gathered here by
     lane (the active agent's neighbour rows of the CommPlan), so the scan
     body touches no plan-indexed gathers — only the four state arrays.
-    ρ and ρ̃ live in one ``(2·E_A, p)`` array on the device (ρ̃ rows at
-    offset ``E_A``); ``rho_gidx``/``rho_tgt`` index that flat layout, and
-    invalid/padded entries carry the sentinel ``2·E_A`` which drop-mode
-    scatters discard.  Lane padding uses sentinel agent ``n`` (reads
-    clamp, commits drop); ``kidx`` maps lanes to event indices (sentinel
-    ``K``) for per-event RNG keys.
+    ρ and ρ̃ live in one ``(2·e_a, p)`` array on the device (ρ̃ rows at
+    offset ``e_a``); ``rho_gidx``/``rho_tgt`` index that flat layout, and
+    invalid/padded entries carry the sentinel ``2·e_a`` which drop-mode
+    scatters discard (``e_a`` defaults to the plan's real A-edge count
+    but may be padded up for fleet stacking).  Lane padding uses sentinel
+    agent ``n`` (reads clamp, commits drop); ``kidx`` maps lanes to event
+    indices (sentinel ``K``) for per-event RNG keys.
+
+    Every per-wave array is *fixed-shape and stackable*: :func:`pad_plan`
+    pads a plan to shared (width, wave-count, ρ-layout) maxima with
+    provably inert waves/lanes, and :func:`stack_plans` stacks padded
+    plans into one fleet plan whose arrays carry a leading ``S`` axis
+    (same per-field layout, one more axis — the ``n``/``e_a``/``K``
+    sentinels are shared fleet-wide).
     """
 
     width: int                # B = max wavefront size (<= n)
+    n: int                    # node count; sentinel agent id for pad lanes
+    e_a: int                  # flat ρ/ρ̃ layout half-size (>= real E_A);
+                              #   pad slots carry the sentinel 2·e_a
+    K: int                    # event count; kidx sentinel for pad lanes
     agent: np.ndarray         # (n_waves, B) i32, pad = n
     wslot: np.ndarray         # (n_waves, B) i32 ring slot for this write
     w_self: np.ndarray        # (n_waves, B) f32 W[a, a]
@@ -176,11 +189,206 @@ class WavefrontPlan:
     out_wt: np.ndarray        # (n_waves, B, ko) f32 A[dst, a] (0 = pad)
     kidx: np.ndarray          # (n_waves, B) i64 event index, pad = K
     event_start: np.ndarray   # (n_waves,) i64 first event of each wave
+                              #   (pad waves carry K: they sort last)
     sizes: np.ndarray         # (n_waves,) i32 valid lanes per wave
 
     @property
     def n_waves(self) -> int:
-        return int(self.agent.shape[0])
+        # agent is (n_waves, B) for a single plan, (S, n_waves, B) for a
+        # fleet-stacked one: the wave axis is always second-to-last
+        return int(self.agent.shape[-2])
+
+    @property
+    def n_lanes(self) -> int:
+        """Fleet size: 1 for a single plan, S for a stacked one."""
+        return 1 if self.agent.ndim == 2 else int(self.agent.shape[0])
+
+
+# per-wave array fields, in declaration order; every padding/stacking
+# helper below treats them uniformly (the wave axis is axis 0 of each)
+_WAVE_FIELDS = ("agent", "wslot", "w_self", "a_self", "rslot_v", "src_v",
+                "w_in", "rslot_rho", "hist_epos", "a_val", "rho_gidx",
+                "out_wt", "kidx", "event_start", "sizes")
+
+
+def _lane_fill(wf: WavefrontPlan, field: str):
+    """The inert fill value of a padded *lane* of ``field``: commits drop
+    (sentinel agent / ρ row), reads clamp, weights and validity are 0."""
+    return {"agent": wf.n, "rho_gidx": 2 * wf.e_a, "kidx": wf.K}.get(field, 0)
+
+
+def slice_plan(wf: WavefrontPlan, w0: int, w1: int) -> WavefrontPlan:
+    """The sub-plan of waves ``[w0, w1)`` (any contiguous wave range of a
+    valid plan is a valid plan: the grouping conditions only reference
+    events at or before each wave)."""
+    return dataclasses.replace(
+        wf, **{f: getattr(wf, f)[w0:w1] for f in _WAVE_FIELDS})
+
+
+def pad_plan(wf: WavefrontPlan, *, width: int | None = None,
+             n_waves: int | None = None,
+             e_a: int | None = None) -> WavefrontPlan:
+    """Pad a plan to shared maxima so plans from different experiments
+    stack into one fleet program.
+
+    * ``width`` — append padded lanes to every wave.  A padded lane
+      carries sentinel agent ``n`` (node-row scatters drop), sentinel ρ
+      rows ``2·e_a`` (flat-ρ and ρ-history scatters drop), zero weights
+      and validity (its reads contribute nothing anywhere), and kidx
+      ``K`` (the zero RNG key row) — the same inertness argument as the
+      engine's own chunk padding and the RavelSpec pad tail.
+    * ``n_waves`` — append all-padded waves (every lane inert as above;
+      ``event_start = K`` keeps the array sorted, ``sizes = 0``).
+    * ``e_a`` — re-target the flat ρ/ρ̃ layout to a larger half-size:
+      ρ rows keep their positions, ρ̃ rows shift by the new offset, and
+      sentinels become ``2·e_a_new``.  The extra state rows are never
+      referenced by any real lane.
+    """
+    width = wf.width if width is None else int(width)
+    n_w = wf.n_waves if n_waves is None else int(n_waves)
+    e_a_new = wf.e_a if e_a is None else int(e_a)
+    if width < wf.width or n_w < wf.n_waves or e_a_new < wf.e_a:
+        raise ValueError(
+            f"cannot shrink a plan: have (width={wf.width}, "
+            f"n_waves={wf.n_waves}, e_a={wf.e_a}), asked for "
+            f"({width}, {n_w}, {e_a_new})")
+    out = {f: getattr(wf, f) for f in _WAVE_FIELDS}
+    if e_a_new != wf.e_a:
+        g = out["rho_gidx"]
+        out["rho_gidx"] = np.where(
+            g < wf.e_a, g,
+            np.where(g < 2 * wf.e_a, g + (e_a_new - wf.e_a),
+                     2 * e_a_new)).astype(g.dtype)
+    wf2 = dataclasses.replace(wf, e_a=e_a_new)   # fills use the new layout
+    if width != wf.width:
+        for f in _WAVE_FIELDS:
+            a = out[f]
+            if a.ndim < 2:          # event_start / sizes have no lane axis
+                continue
+            pad = np.full((a.shape[0], width - wf.width) + a.shape[2:],
+                          _lane_fill(wf2, f), a.dtype)
+            out[f] = np.concatenate([a, pad], axis=1)
+    if n_w != wf.n_waves:
+        extra = n_w - wf.n_waves
+        for f in _WAVE_FIELDS:
+            a = out[f]
+            if f == "event_start":
+                fill = wf.K          # padded waves sort after every event
+            elif f == "sizes":
+                fill = 0
+            else:
+                fill = _lane_fill(wf2, f)
+            pad = np.full((extra,) + a.shape[1:], fill, a.dtype)
+            out[f] = np.concatenate([a, pad], axis=0)
+    return dataclasses.replace(wf2, width=width, **out)
+
+
+def concat_plans(plans: "list[WavefrontPlan]") -> WavefrontPlan:
+    """Concatenate plans along the wave axis (inverse of chunk-wise
+    :func:`slice_plan`; all parts must share width and layout)."""
+    first = plans[0]
+    for wf in plans[1:]:
+        if (wf.width, wf.n, wf.e_a, wf.K) != (first.width, first.n,
+                                              first.e_a, first.K):
+            raise ValueError("concat_plans needs identical width/n/e_a/K")
+    return dataclasses.replace(
+        first, **{f: np.concatenate([getattr(w, f) for w in plans], axis=0)
+                  for f in _WAVE_FIELDS})
+
+
+def flatten_plans(stacked: WavefrontPlan) -> WavefrontPlan:
+    """Lower a fleet-stacked plan to ONE wider single-experiment plan.
+
+    The S lanes of wave w become S·B lanes of one wave by offsetting
+    every index into lane-private blocks: nodes of lane s live at
+    ``[s·n, (s+1)·n)`` (so the fleet node state is ``(S·n, 4, p)``),
+    ρ rows at ``[s·e_a, (s+1)·e_a)`` with ρ̃ at offset ``S·e_a`` (state
+    ``(2·S·e_a, p)``, histories ``(H, S·n, p)``/``(H, S·e_a, p)``), and
+    events at ``[s·K, (s+1)·K)`` (per-lane RNG streams concatenate).
+    Sentinels map to the fleet-wide sentinels ``S·n``/``2·S·e_a``/``S·K``.
+
+    Correctness is index disjointness: every cross-event interaction in
+    a WavefrontPlan happens through these indices, lanes' blocks are
+    disjoint, and padded slots still drop — so the flat program is
+    exactly the S independent programs, interleaved.  The payoff is the
+    compile: the scan body is the *single-experiment* wave step at width
+    S·B (no fleet vmap), so the fleet compiles like one run.
+
+    ``event_start``/``sizes`` become fleet aggregates (earliest flat
+    event / total lanes per wave) — chunk alignment must be done before
+    stacking (as ``run_sweep`` does).
+    """
+    if stacked.agent.ndim != 3:
+        raise ValueError("flatten_plans expects a stack_plans output "
+                         "(arrays with a leading S axis)")
+    S = stacked.n_lanes
+    n, e_a, K, B = stacked.n, stacked.e_a, stacked.K, stacked.width
+    NW = stacked.n_waves
+    s_off = np.arange(S, dtype=np.int64)[:, None, None]
+
+    def flat(a):
+        """(S, NW, B, ...) -> (NW, S*B, ...)"""
+        return np.moveaxis(a, 0, 1).reshape((NW, S * a.shape[2])
+                                            + a.shape[3:])
+
+    agent = np.where(stacked.agent == n, S * n, stacked.agent + s_off * n)
+    src_v = stacked.src_v + s_off[..., None] * n
+    hist_epos = stacked.hist_epos + s_off[..., None] * e_a
+    g = stacked.rho_gidx
+    gidx = np.where(
+        g < e_a, g + s_off[..., None] * e_a,
+        np.where(g < 2 * e_a, g + (S - 1 + s_off[..., None]) * e_a,
+                 2 * S * e_a))
+    kidx = np.where(stacked.kidx == K, S * K, stacked.kidx + s_off * K)
+    return dataclasses.replace(
+        stacked, width=S * B, n=S * n, e_a=S * e_a, K=S * K,
+        agent=flat(agent).astype(np.int32),
+        wslot=flat(stacked.wslot), w_self=flat(stacked.w_self),
+        a_self=flat(stacked.a_self),
+        rslot_v=flat(stacked.rslot_v),
+        src_v=flat(src_v).astype(np.int32),
+        w_in=flat(stacked.w_in), rslot_rho=flat(stacked.rslot_rho),
+        hist_epos=flat(hist_epos).astype(np.int32),
+        a_val=flat(stacked.a_val),
+        rho_gidx=flat(gidx).astype(np.int32),
+        out_wt=flat(stacked.out_wt),
+        kidx=flat(kidx),
+        event_start=(stacked.event_start
+                     + np.arange(S, dtype=np.int64)[:, None] * K).min(0),
+        sizes=stacked.sizes.sum(0).astype(np.int32),
+    )
+
+
+def stack_plans(plans: "list[WavefrontPlan]") -> WavefrontPlan:
+    """Stack per-experiment plans into one fleet plan with a leading
+    ``S`` axis on every per-wave array.
+
+    Plans are first padded (:func:`pad_plan`) to the fleet-wide
+    (width, wave-count, ρ-layout) maxima; they must already share ``n``,
+    ``K``, and the per-node degree maxima (kw, ka, ko) — normalize
+    CommPlans from different topologies with
+    :func:`repro.core.plan.pad_comm_plan` before building them.
+    """
+    if not plans:
+        raise ValueError("stack_plans needs at least one plan")
+    ns = {wf.n for wf in plans}
+    Ks = {wf.K for wf in plans}
+    if len(ns) != 1 or len(Ks) != 1:
+        raise ValueError(f"plans must share n and K, got n={ns}, K={Ks}")
+    degs = {(wf.rslot_v.shape[-1], wf.rslot_rho.shape[-1],
+             wf.out_wt.shape[-1]) for wf in plans}
+    if len(degs) != 1:
+        raise ValueError(
+            f"plans carry different (kw, ka, ko) degree maxima {degs}; "
+            "pad the CommPlans with plan.pad_comm_plan first")
+    width = max(wf.width for wf in plans)
+    n_waves = max(wf.n_waves for wf in plans)
+    e_a = max(wf.e_a for wf in plans)
+    padded = [pad_plan(wf, width=width, n_waves=n_waves, e_a=e_a)
+              for wf in plans]
+    return dataclasses.replace(
+        padded[0],
+        **{f: np.stack([getattr(w, f) for w in padded]) for f in _WAVE_FIELDS})
 
 
 def _write_counters(agent: np.ndarray, n: int) -> np.ndarray:
@@ -206,7 +414,8 @@ def _resolve_read_slots(stamps: np.ndarray, owner: np.ndarray,
 
 def build_wavefront_plan(schedule: Schedule, plan, H: int, *,
                          break_every: int = 0,
-                         max_width: int | None = None) -> WavefrontPlan:
+                         max_width: int | None = None,
+                         e_a: int | None = None) -> WavefrontPlan:
     """Compile ``schedule`` into a :class:`WavefrontPlan` over ``plan``
     (a :class:`repro.core.plan.CommPlan`).
 
@@ -217,6 +426,10 @@ def build_wavefront_plan(schedule: Schedule, plan, H: int, *,
     start index).  Padded lanes cost real gradient compute, so the default
     picks the width minimizing modelled cost (scan steps + padded lanes)
     over the realized size distribution.
+    ``e_a``: half-size of the flat ρ/ρ̃ state layout the plan indexes
+    into; defaults to the plan's real A-edge count, and may be padded up
+    front (e.g. to a fleet-wide maximum) instead of remapped later with
+    :func:`pad_plan`.
     """
     agent = np.asarray(schedule.agent, dtype=np.int64)
     K, n = agent.shape[0], plan.n
@@ -242,9 +455,13 @@ def build_wavefront_plan(schedule: Schedule, plan, H: int, *,
     rslot_v = slots_v[ev[:, None], iw_e]              # (K, kw)
     rslot_rho = slots_r[ev[:, None], ia_e]            # (K, ka)
 
-    # flat ρ/ρ̃ indices: ρ rows at [0, E_A), ρ̃ rows at [E_A, 2·E_A);
-    # sentinel 2·E_A marks pad slots (drop-mode scatters discard them)
-    e_a = max(1, plan.n_edges_a)
+    # flat ρ/ρ̃ indices: ρ rows at [0, e_a), ρ̃ rows at [e_a, 2·e_a);
+    # sentinel 2·e_a marks pad slots (drop-mode scatters discard them)
+    if e_a is None:
+        e_a = max(1, plan.n_edges_a)
+    elif e_a < max(1, plan.n_edges_a):
+        raise ValueError(f"e_a={e_a} < the plan's A-edge count "
+                         f"{plan.n_edges_a}")
     oa_e, ia_e2 = plan.out_a_epos[agent], plan.in_a_epos[agent]
     o_ok = plan.out_a_val[agent] > 0
     gidx = np.concatenate([np.where(o_ok, oa_e, 2 * e_a),
@@ -291,6 +508,9 @@ def build_wavefront_plan(schedule: Schedule, plan, H: int, *,
     f32 = lambda a: np.asarray(a, np.float32)
     return WavefrontPlan(
         width=B,
+        n=n,
+        e_a=int(e_a),
+        K=K,
         agent=i32(pick(agent, n)),
         wslot=i32(pick(wslot, 0)),
         w_self=f32(pick(plan.w_diag[agent], 0.0)),

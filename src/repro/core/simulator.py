@@ -22,6 +22,18 @@ Two execution modes share one state layout:
   ``(H, n, p)`` / ``(H, E_A, p)`` snapshot commits; kept as the oracle
   the wavefront path is tested against.
 
+A third entry point batches at the *experiment* level: :func:`run_sweep`
+runs a fleet of S independent (topology, schedule, seed) experiments as
+ONE compiled program — per-lane plans are degree-normalized, padded to
+shared wave maxima, stacked into dense ``(S, ...)`` arrays
+(``schedule.pad_plan`` / ``stack_plans``), and then *flattened*
+(``schedule.flatten_plans``) into one wider single-experiment program:
+the fleet state is the ``(S, n, 4, p)`` lane stack realized as
+block-concatenated ``(S·n, 4, p)`` rows, and the scan body is the
+ordinary wave step at width S·B — so the fleet pays ONE compile, not S.
+Each lane reproduces its individual :func:`run_rfast` trajectory to fp32
+tolerance.
+
 State representation (flat parameter vectors, ``p`` = dimension):
 
 * ``x, v, z, g_prev`` — ``(n, p)`` per-node model / intermediate / tracking /
@@ -48,14 +60,16 @@ import numpy as np
 
 from ..kernels.rfast_update.ops import rfast_commit
 from .paramvec import GradProvider, as_grad_fn
-from .plan import CommPlan, as_comm_plan
+from .plan import CommPlan, as_comm_plan, pad_comm_plan
 from .protocol import consensus_mix, descent_step, mailbox_merge, tracking_step
-from .schedule import Schedule, build_wavefront_plan
+from .schedule import (Schedule, build_wavefront_plan, concat_plans,
+                       flatten_plans, pad_plan, slice_plan, stack_plans)
 from .topology import Topology
 
 __all__ = ["RFASTState", "PackedState", "init_state", "zeros_state",
            "pack_state", "unpack_state", "wave_inputs", "rfast_scan",
-           "rfast_wavefront_scan", "run_rfast", "tracked_mass"]
+           "rfast_wavefront_scan", "rfast_sweep_scan", "run_rfast",
+           "run_sweep", "tracked_mass"]
 
 GradFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 # grad_fn(node_id, x_node, rng_key) -> gradient, all traced.
@@ -276,12 +290,28 @@ class _WaveInputs(NamedTuple):
     keys: jnp.ndarray       # (B, 2)
 
 
-def pack_state(state: RFASTState) -> PackedState:
+def pack_state(state: RFASTState, *, e_a: int | None = None) -> PackedState:
+    """Device layout for the wavefront/sweep engines.
+
+    ``e_a`` pads the ρ state to a larger flat layout (fleet sweeps
+    normalize every lane to the fleet-wide max A-edge count; the extra
+    zero rows are never referenced by a real lane and the matching
+    WavefrontPlan must be built/padded against the same ``e_a``).
+    """
+    rho, rho_buf, rho_hist = state.rho, state.rho_buf, state.rho_hist
+    if e_a is not None and e_a != rho.shape[0]:
+        if e_a < rho.shape[0]:
+            raise ValueError(f"e_a={e_a} < state's A-edge count "
+                             f"{rho.shape[0]}")
+        pad = e_a - rho.shape[0]
+        rho = jnp.pad(rho, ((0, pad), (0, 0)))
+        rho_buf = jnp.pad(rho_buf, ((0, pad), (0, 0)))
+        rho_hist = jnp.pad(rho_hist, ((0, 0), (0, pad), (0, 0)))
     return PackedState(
         nodes=jnp.stack([state.x, state.v, state.z, state.g_prev], axis=1),
-        rho2=jnp.concatenate([state.rho, state.rho_buf], axis=0),
+        rho2=jnp.concatenate([rho, rho_buf], axis=0),
         v_hist=state.v_hist,
-        rho_hist=state.rho_hist,
+        rho_hist=rho_hist,
     )
 
 
@@ -424,6 +454,44 @@ def wave_inputs(wf, step_keys: jnp.ndarray) -> _WaveInputs:
     )
 
 
+def rfast_sweep_scan(
+    grad_fn: Objective,
+    gamma: float,
+    *,
+    ko: int,
+    n_per_lane: int,
+    donate: bool = True,
+    impl: str = "jnp",
+    interpret: bool | None = None,
+):
+    """Fleet engine: a jitted ``(packed, wave_inputs) -> packed`` over a
+    fleet-FLATTENED plan (:func:`repro.core.schedule.flatten_plans`).
+
+    The fleet program IS the single-experiment wavefront program at
+    width S·B over block-concatenated state (nodes ``(S·n, 4, p)``, ρ
+    ``(2·S·e_a, p)``): lanes were made disjoint by index offsetting
+    host-side, so the scan body is :func:`_wave_step` itself — no fleet
+    vmap, and the compile cost matches ONE run, not S.  ``grad_fn``
+    still sees lane-local node ids (the flat agent id is
+    ``s·n_per_lane + a``, reduced mod ``n_per_lane`` before the call);
+    ``ko`` is the fleet-wide max A out-degree.
+    """
+    if impl not in ("jnp", "pallas"):
+        raise ValueError(f"impl must be 'jnp' or 'pallas', got {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grad_fn = as_grad_fn(grad_fn)
+    lane_grad = lambda i, x, key: grad_fn(i % n_per_lane, x, key)
+    step = partial(_wave_step, grad_fn=lane_grad, gamma=gamma, ko=ko,
+                   impl=impl, interpret=interpret)
+
+    def run_waves(state: PackedState, waves: _WaveInputs):
+        state, _ = jax.lax.scan(step, state, waves)
+        return state
+
+    return jax.jit(run_waves, donate_argnums=(0,) if donate else ())
+
+
 def tracked_mass(state: RFASTState) -> jnp.ndarray:
     """LHS of the Lemma-3 invariant: Σ_i z_i + Σ_e (ρ_e − ρ̃_e)."""
     return state.z.sum(axis=0) + (state.rho - state.rho_buf).sum(axis=0)
@@ -538,7 +606,7 @@ def run_rfast(
     bounds = [int(np.searchsorted(wf.event_start, s))
               for s in range(0, K, eval_every)] + [wf.n_waves]
     cmax = max(b1 - b0 for b0, b1 in zip(bounds, bounds[1:]))
-    n_pad = plan.n
+    n_pad = wf.n
     skip = k0 // eval_every          # chunks already realized in state0
 
     for ci, (w0, w1) in enumerate(zip(bounds[skip:], bounds[skip + 1:]),
@@ -558,7 +626,7 @@ def run_rfast(
             rslot_v=sl(waves.rslot_v, 0), src_v=sl(waves.src_v, 0),
             w_in=sl(waves.w_in, 0.0), rslot_rho=sl(waves.rslot_rho, 0),
             hist_epos=sl(waves.hist_epos, 0), a_val=sl(waves.a_val, 0.0),
-            rho_gidx=sl(waves.rho_gidx, 2 * max(1, plan.n_edges_a)),
+            rho_gidx=sl(waves.rho_gidx, 2 * wf.e_a),
             out_wt=sl(waves.out_wt, 0.0), keys=sl(waves.keys, 0))
         packed = runner(packed, chunk_waves)
         e = min(K, (ci + 1) * eval_every)
@@ -569,3 +637,187 @@ def run_rfast(
         if chunk_cb is not None:
             chunk_cb(unpack_state(packed, e), e)
     return unpack_state(packed, K), metrics
+
+
+# --------------------------------------------------------------------- #
+# fleet sweeps: many experiments as one compiled wavefront program
+# --------------------------------------------------------------------- #
+def _lane_state(packed: PackedState, s: int, k: int, *, S: int, n: int,
+                e_a: int, e_a_lane: int) -> RFASTState:
+    """Slice fleet lane ``s`` out of the flat fleet state (lane blocks:
+    nodes ``[s·n, (s+1)·n)``, ρ ``[s·e_a, ·)`` with ρ̃ at offset
+    ``S·e_a``) and strip its ρ state back to the lane's real A-edge
+    count (the fleet layout pads every lane to the max)."""
+    nd = packed.nodes[s * n:(s + 1) * n]
+    rho = packed.rho2[s * e_a:s * e_a + e_a_lane]
+    rho_buf = packed.rho2[(S + s) * e_a:(S + s) * e_a + e_a_lane]
+    return RFASTState(
+        k=jnp.asarray(k, jnp.int32),
+        x=nd[:, 0], v=nd[:, 1], z=nd[:, 2], g_prev=nd[:, 3],
+        rho=rho, rho_buf=rho_buf,
+        v_hist=packed.v_hist[:, s * n:(s + 1) * n],
+        rho_hist=packed.rho_hist[:, s * e_a:s * e_a + e_a_lane],
+    )
+
+
+def run_sweep(
+    topos,
+    schedules,
+    grad_fn: Objective,
+    x0: jnp.ndarray,
+    gamma: float,
+    *,
+    seeds=None,
+    eval_every: int = 0,
+    eval_fn: Callable[[RFASTState, float], dict] | None = None,
+    impl: str = "jnp",
+) -> tuple[list[RFASTState], list[list[dict]]]:
+    """Run a fleet of S independent experiments as ONE compiled program.
+
+    Each lane is one (topology, schedule, seed) experiment — e.g. a
+    :func:`repro.core.scenario.realize_batch` sweep of one scenario over
+    many seeds, or a registry sweep across scenarios and topologies.
+    Per lane the realized trajectory matches an individual
+    :func:`run_rfast` wavefront run of the same (schedule, seed) to fp32
+    tolerance; the fleet executes as ONE flattened wavefront program
+    (``schedule.flatten_plans``: lanes become index-disjoint blocks of a
+    width-S·B wave), so one compile and one ``lax.scan`` serve all S
+    experiments and the per-wave math is batched ``(S·B, p)`` instead of
+    dispatched S separate times.
+
+    Args:
+      topos: one Topology/CommPlan shared by every lane, or a sequence of
+        S of them.  All lanes must share the node count ``n`` (the packed
+        fleet state is ``(S, n, 4, p)``); topologies may otherwise differ
+        — CommPlans are degree-normalized (``plan.pad_comm_plan``) and
+        the per-lane WavefrontPlans padded/stacked to fleet maxima, with
+        padded waves/lanes provably inert.
+      schedules: S realized Schedules sharing ``K`` (each its own trace).
+      grad_fn: the shared objective (bare callable or GradProvider);
+        gradients are sampled per (lane, event) from the lane's own RNG
+        stream, exactly as the individual runs would.
+      seeds: per-lane RNG seeds (defaults to 0 for every lane, matching
+        ``run_rfast``'s default).
+      eval_every / eval_fn: as in :func:`run_rfast`, evaluated per lane —
+        the metrics come back as one list per lane, each entry stamped
+        with that lane's own virtual time.
+      impl: ``"pallas"`` commits every (lane, event) through the fused
+        ``rfast_commit`` kernel, vmapped across the fleet.
+
+    Returns:
+      ``(states, metrics)`` — the final per-lane :class:`RFASTState` list
+      (ρ state stripped back to each lane's real A-edge count) and the
+      per-lane metrics lists.
+    """
+    schedules = list(schedules)
+    S = len(schedules)
+    if S == 0:
+        raise ValueError("run_sweep needs at least one lane")
+    if isinstance(topos, (Topology, CommPlan)):
+        topos = [topos] * S
+    plans = [as_comm_plan(t) for t in topos]
+    if len(plans) != S:
+        raise ValueError(f"{len(plans)} topologies for {S} schedules")
+    n = plans[0].n
+    if any(pl.n != n for pl in plans):
+        raise ValueError("all lanes must share the node count n "
+                         f"(got {[pl.n for pl in plans]})")
+    K = schedules[0].K
+    if any(s.K != K for s in schedules):
+        raise ValueError("all lanes must share the event count K "
+                         f"(got {[s.K for s in schedules]})")
+    if seeds is None:
+        seeds = [0] * S
+    seeds = [int(s) for s in seeds]
+    if len(seeds) != S:
+        raise ValueError(f"{len(seeds)} seeds for {S} lanes")
+    grad_fn = as_grad_fn(grad_fn)
+    if eval_every <= 0:
+        eval_every = K
+
+    # fleet-wide shape maxima: history depth, degrees, ρ layout
+    H = max(int(s.D) for s in schedules) + 2
+    kw = max(pl.kw for pl in plans)
+    ka = max(pl.ka for pl in plans)
+    ko = max(pl.ko for pl in plans)
+    e_a = max(max(1, pl.n_edges_a) for pl in plans)
+    padded_plans = [pad_comm_plan(pl, kw=kw, ka=ka, ko=ko) for pl in plans]
+
+    # per-lane RNG streams, derived exactly as run_rfast does
+    x0 = jnp.asarray(x0, jnp.float32)
+    if x0.ndim == 1:
+        x0 = jnp.tile(x0[None, :], (n, 1))
+    if x0.ndim == 3 and x0.shape[0] != S:
+        raise ValueError(f"per-lane x0 has {x0.shape[0]} lanes, "
+                         f"expected {S}")
+    x0_lanes = (x0 if x0.ndim == 3
+                else jnp.broadcast_to(x0[None], (S,) + x0.shape))
+    p = int(x0_lanes.shape[-1])
+    lane_keys, init_keys = [], []
+    for s in range(S):
+        key, init_key = jax.random.split(jax.random.PRNGKey(seeds[s]))
+        lane_keys.append(jax.random.split(key, K))
+        init_keys.append(init_key)
+    step_keys = jnp.stack(lane_keys)                        # (S, K, 2)
+
+    # fleet init (the paper init per lane: z = g_prev = ∇f(x0; ζ0) from
+    # the lane's init key, v = ρ = ρ̃ = hist = 0) — lane s's g0 is
+    # op-identical to init_state's, so the trajectories match the
+    # per-lane runs.  Deliberately NOT jitted: a jit here would compile
+    # the gradient graph a second time (the scan body below already
+    # pays for it), doubling the fleet's one-time cost.  Layout: the
+    # flat fleet state of flatten_plans (lane blocks on node/edge axes).
+    node_keys = jax.vmap(lambda k: jax.random.split(k, n))(
+        jnp.stack(init_keys))
+    g0 = jax.vmap(
+        lambda x, ks: jax.vmap(grad_fn)(jnp.arange(n), x, ks)
+    )(x0_lanes, node_keys)
+    nodes = jnp.stack([x0_lanes, jnp.zeros_like(x0_lanes), g0, g0],
+                      axis=2)
+    z = lambda *s_: jnp.zeros(s_, jnp.float32)
+    packed = PackedState(nodes=nodes.reshape(S * n, 4, p),
+                         rho2=z(2 * S * e_a, p),
+                         v_hist=z(H, S * n, p),
+                         rho_hist=z(H, S * e_a, p))
+
+    # per-lane plans, then chunk-aligned fleet stacking: chunk c of every
+    # lane is padded to the fleet-wide max chunk wave count, so chunk c
+    # occupies waves [c*cmax, (c+1)*cmax) in EVERY lane and one compiled
+    # scan body serves all chunks of all lanes
+    wfs = [build_wavefront_plan(schedules[s], padded_plans[s], H,
+                                break_every=eval_every, e_a=e_a)
+           for s in range(S)]
+    chunk_starts = list(range(0, K, eval_every))
+    bounds = [[int(np.searchsorted(wf.event_start, c0))
+               for c0 in chunk_starts] + [wf.n_waves] for wf in wfs]
+    cmax = max(b[c + 1] - b[c]
+               for b in bounds for c in range(len(chunk_starts)))
+    B = max(wf.width for wf in wfs)
+    rechunked = []
+    for wf, b in zip(wfs, bounds):
+        rechunked.append(concat_plans(
+            [pad_plan(slice_plan(wf, b[c], b[c + 1]),
+                      width=B, n_waves=cmax, e_a=e_a)
+             for c in range(len(chunk_starts))]))
+    fleet = flatten_plans(stack_plans(rechunked))
+    waves = wave_inputs(fleet, step_keys.reshape(S * K, 2))
+
+    runner = rfast_sweep_scan(grad_fn, gamma, ko=ko, n_per_lane=n,
+                              donate=True, impl=impl)
+    metrics: list[list[dict]] = [[] for _ in range(S)]
+    lane_kw = dict(S=S, n=n, e_a=e_a)
+    e_a_lane = [max(1, pl.n_edges_a) for pl in plans]
+    for ci in range(len(chunk_starts)):
+        w = jax.tree.map(lambda a: a[ci * cmax:(ci + 1) * cmax], waves)
+        packed = runner(packed, w)
+        e = min(K, (ci + 1) * eval_every)
+        if eval_fn is not None:
+            for s in range(S):
+                m = eval_fn(_lane_state(packed, s, e,
+                                        e_a_lane=e_a_lane[s], **lane_kw),
+                            float(schedules[s].times[e - 1]))
+                m["k"] = e
+                metrics[s].append(m)
+    states = [_lane_state(packed, s, K, e_a_lane=e_a_lane[s], **lane_kw)
+              for s in range(S)]
+    return states, metrics

@@ -1,7 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede any jax import: jax locks the device count on first init.
-# This is dry-run-only — tests/benches see the real single CPU device.
+
+# MUST precede any jax import; appends to the operator's own XLA_FLAGS
+# (an explicit operator device count wins).  This is dry-run-only —
+# tests/benches see the real single CPU device.
+from repro.launch.xla_env import force_host_devices
+force_host_devices()
 
 _DOC = """Multi-pod dry-run: lower + compile every (architecture × input shape)
 for the production meshes and capture memory / cost / collective data.
@@ -114,12 +117,12 @@ def run_case(arch: str, shape: str, *, multi_pod: bool = False,
         return rec
     kw = dict(rules=rules, **(build_kw or {}))
     try:
-        t0 = time.time()
+        t0 = time.perf_counter()
         fn, args = build_case(cfg, mesh, shape, **kw)
         lowered = jax.jit(fn).lower(*args)
-        t1 = time.time()
+        t1 = time.perf_counter()
         compiled = lowered.compile()
-        t2 = time.time()
+        t2 = time.perf_counter()
         rec["ok"] = True
         rec["lower_s"] = round(t1 - t0, 1)
         rec["compile_s"] = round(t2 - t1, 1)

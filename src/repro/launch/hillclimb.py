@@ -1,11 +1,15 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """§Perf hillclimb driver: run named dry-run variants for the three chosen
 (arch × shape) pairs and print their roofline terms side by side.
 
     PYTHONPATH=src python -m repro.launch.hillclimb --pair train|moe|decode
 """
+import os
+
+# must run before jax initializes; appends to the operator's own
+# XLA_FLAGS (e.g. dump directives survive, an explicit device count wins)
+from repro.launch.xla_env import force_host_devices
+force_host_devices()
+
 import argparse
 import json
 

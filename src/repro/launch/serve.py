@@ -43,13 +43,13 @@ def main() -> None:
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     # batched prefill: ONE forward fills the cache (models/transformer.py)
     cache, logits = jax.jit(
         lambda p, t, f: prefill_cache(cfg, p, t, max_len, frontend=f),
         static_argnames=())(params, prompts, front)
     jax.block_until_ready(logits)
-    t1 = time.time()
+    t1 = time.perf_counter()
     step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
 
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
@@ -65,7 +65,7 @@ def main() -> None:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out.append(tok)
     toks = np.asarray(jnp.concatenate(out, axis=1))
-    t2 = time.time()
+    t2 = time.perf_counter()
     print(f"arch={cfg.name} prefill {args.prompt_len} tok: {t1-t0:.2f}s; "
           f"decode {args.gen} tok x {args.batch} seq: {t2-t1:.2f}s "
           f"({args.gen*args.batch/(t2-t1):.1f} tok/s)")

@@ -143,7 +143,7 @@ def _train_sync(args, cfg) -> dict:
     rng = np.random.default_rng(args.seed + 1)
     logger = MetricsLogger(args.metrics) if args.metrics else None
     timer = StepTimer()
-    t0 = time.time()
+    t0 = time.perf_counter()
     losses: list[float] = []
     for step in range(start, args.steps):
         masks = None
@@ -161,7 +161,7 @@ def _train_sync(args, cfg) -> dict:
                 or step + 1 == args.steps):
             l = float(metrics["loss"])
             losses.append(l)
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             print(f"step {step+1:5d} loss {l:.4f} "
                   f"({dt:.1f}s, {timer.steps_per_sec:.2f} it/s)", flush=True)
         if args.ckpt and (step + 1) % args.ckpt_every == 0:
@@ -211,7 +211,7 @@ def _train_async(args, cfg) -> dict:
 
     logger = MetricsLogger(args.metrics) if args.metrics else None
     timer = StepTimer()
-    t0 = time.time()
+    t0 = time.perf_counter()
     losses: list[float] = [float(prob.mean_loss(x0))]
     print(f"event {0:6d} loss {losses[0]:.4f} (init)", flush=True)
 
@@ -232,7 +232,7 @@ def _train_async(args, cfg) -> dict:
         m = eval_fn(state, t)
         losses.append(m["loss"])
         ev = min(K, k0 + (len(losses) - 1) * eval_every)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         print(f"event {ev:6d} loss {m['loss']:.4f} "
               f"vtime {t:8.1f} ({dt:.1f}s)", flush=True)
         return m

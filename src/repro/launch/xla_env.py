@@ -1,0 +1,17 @@
+"""XLA_FLAGS handling for the dry-run drivers (jax-free: must be
+importable and called before anything touches jax, which locks the
+device count on first init)."""
+import os
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices(count: int = 512) -> None:
+    """Append ``--xla_force_host_platform_device_count=<count>`` to
+    ``XLA_FLAGS``, preserving every flag the operator already set.  If
+    the operator set a device count themselves (any value), their
+    explicit choice wins and nothing is changed."""
+    tokens = os.environ.get("XLA_FLAGS", "").split()
+    if any(t.startswith(_FORCE_FLAG) for t in tokens):
+        return
+    os.environ["XLA_FLAGS"] = " ".join(tokens + [f"{_FORCE_FLAG}={count}"])

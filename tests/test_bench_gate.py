@@ -83,6 +83,24 @@ def test_gate_skips_missing_check_when_run_meta_differs(tmp_path):
     assert sorted(p["problem"] for p in probs) == ["missing", "regression"]
 
 
+def test_gate_structural_mode_ignores_timing_regressions(tmp_path):
+    """--structural (the CI gate): errored and missing rows still fail,
+    arbitrary slowdowns do not — shared CI runners are too noisy for
+    the timing threshold."""
+    base = _write_baseline(tmp_path, [
+        _row("sim", "fast", 100.0),
+        _row("sim", "vanished", 50.0),
+    ])
+    records = [
+        _row("sim", "fast", 1000.0),                # 10x slower: ignored
+        _row("sim", "broken", None, "ERROR:Boom"),  # still gates
+    ]
+    probs = bench_run._compare(records, base, 0.25, structural=True)
+    assert sorted(p["problem"] for p in probs) == ["errored", "missing"]
+    clean = [_row("sim", "fast", 1000.0), _row("sim", "vanished", 50.0)]
+    assert bench_run._compare(clean, base, 0.25, structural=True) == []
+
+
 def test_gate_ignores_zero_or_errored_baseline_rows(tmp_path):
     base = _write_baseline(tmp_path, [
         _row("sim", "was_broken", None),
