@@ -80,6 +80,22 @@ def run(S: int = 8, n: int = 7, K: int = 2000,
                         f"speedup_vs_sequential={t_seq / t_fleet:.2f}x;"
                         f"lane_maxerr_vs_run_rfast={maxerr:.1e};K={K}"))
 
+    # --- the fleet again through the fused-grid commit -----------------
+    def fleet_pallas():
+        sts, _ = run_sweep(topo, scheds, prob, x0, gamma,
+                           seeds=range(S), impl="pallas")
+        jax.block_until_ready(sts[-1].x)
+        last["states"] = sts
+
+    t_fp = _median_wall(fleet_pallas)
+    sts = last["states"]
+    perr = max(float(np.abs(np.asarray(sts[s].x) - finals[s]).max())
+               for s in range(S))
+    rows.append(csv_row(f"sweep/fleet_pallas_n{n}_S{S}",
+                        t_fp / (S * K) * 1e6,
+                        f"ratio_vs_jnp_fleet={t_fp / t_fleet:.2f}x;"
+                        f"lane_maxerr_vs_run_rfast={perr:.1e};K={K}"))
+
     # --- heterogeneous fleet: 3 topologies x 2 scenarios ---------------
     Km = max(200, K // 2)
     lane_topos, lane_scheds, lane_seeds = [], [], []

@@ -48,6 +48,15 @@ def _engine_rows(name: str, K: int) -> list[str]:
         runner = rfast_wavefront_scan(plan, gfn, 5e-3, donate=False)
         us_wave = measure_us(runner, packed, waves, reps=3) / Ks
 
+        # same schedule through the fused-grid commit (dispatch-resolved:
+        # compiled on TPU, the jnp emulation twin on CPU) — the maxerr
+        # keeps the grid path honest on real engine traffic
+        runner_p = rfast_wavefront_scan(plan, gfn, 5e-3, donate=False,
+                                        impl="pallas")
+        us_wave_p = measure_us(runner_p, packed, waves, reps=3) / Ks
+        werr = max(float(jnp.abs(a - b).max()) for a, b in
+                   zip(runner(packed, waves), runner_p(packed, waves)))
+
         chunk = rfast_scan(plan, gfn, 5e-3, H, donate=False)
         agent = jnp.asarray(sched.agent)
         sv = jnp.asarray(sched.stamp_v)
@@ -59,6 +68,10 @@ def _engine_rows(name: str, K: int) -> list[str]:
             f"sim/{name}_n{n}_wavefront", us_wave,
             f"speedup_vs_event={us_event / us_wave:.2f}x;"
             f"B={wf.width};waves={wf.n_waves};K={Ks}"))
+        rows.append(csv_row(
+            f"sim/{name}_n{n}_wavefront_pallas", us_wave_p,
+            f"ratio_vs_jnp={us_wave_p / us_wave:.2f}x;"
+            f"maxerr_vs_jnp={werr:.1e};B={wf.width};K={Ks}"))
         rows.append(csv_row(
             f"sim/{name}_n{n}_event", us_event,
             f"mode=event_serial_snapshot;K={Ks}"))

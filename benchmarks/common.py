@@ -36,6 +36,39 @@ def measure_us(fn, *args, warmup: int = 1, reps: int = 5, **kw) -> float:
     return float(np.median(ts)) * 1e6
 
 
+def measure_us_paired(fns: dict, *args, warmup: int = 1, reps: int = 5,
+                      **kw) -> dict:
+    """Median wall time per call in µs for SEVERAL callables, measured in
+    interleaved rounds (one call of each per round, same arguments).
+
+    Host speed drifts between measurement windows (turbo/thermal state,
+    allocator pressure from earlier suites) — timing impl A's reps and
+    then impl B's puts the drift entirely on one side and corrupts the
+    A/B *ratio* the committed rows gate on.  Interleaving lands every
+    drift regime on every callable equally, so ratios stay honest even
+    when absolute numbers move.
+
+    Every timed call starts COLD: the callables here share input
+    arrays, so whichever one runs second finds them warm in LLC — a
+    systematic bias worth 2x+ on shared-cache hosts, and no ordering
+    scheme fixes it (mixed warm/cold samples are bimodal, so the
+    median jumps regimes between runs).  A 64 MB host-memory sweep
+    before each timed call evicts the shared state instead, making
+    every sample the same (cold) measurement."""
+    scrub = np.zeros(1 << 23, dtype=np.float64)          # 64 MB
+    for fn in fns.values():
+        for _ in range(max(1, warmup)):
+            jax.block_until_ready(fn(*args, **kw))
+    ts: dict = {k: [] for k in fns}
+    for _ in range(max(1, reps)):
+        for k, fn in fns.items():
+            scrub += 1.0                                 # LLC eviction
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args, **kw))
+            ts[k].append(time.perf_counter() - t0)
+    return {k: float(np.median(v)) * 1e6 for k, v in ts.items()}
+
+
 @contextmanager
 def stopwatch():
     """``with stopwatch() as sw: ...`` — ``sw['s']`` holds elapsed seconds

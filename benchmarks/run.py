@@ -7,6 +7,12 @@ be committed (e.g. ``BENCH_2026-07-30.json``) and diffed across PRs.
 ``--compare OLD.json`` diffs the fresh us_per_call numbers against such
 a committed baseline and exits non-zero on >25% regressions (tune with
 ``--regression-threshold``) so CI can gate on perf.
+``--perf-gate`` (opt-in, needs ``--compare``) gates the *pallas/jnp
+ratio*: every ``*_pallas_*`` row's ratio to its ``*_jnp_*``/``*_ref_*``
+counterpart is compared against the same ratio in the committed
+baseline, and the run fails when it grew by more than
+``--regression-threshold``.  Ratios-of-ratios cancel host speed, so the
+gate holds the fused-dispatch contract even across machines.
 ``--impl`` selects the protocol backend timed by the kernels suite.
 """
 from __future__ import annotations
@@ -50,6 +56,11 @@ def main() -> None:
     ap.add_argument("--regression-threshold", type=float, default=0.25,
                     help="fractional us_per_call increase treated as a "
                          "regression in --compare mode (default 0.25)")
+    ap.add_argument("--perf-gate", action="store_true",
+                    help="with --compare: fail when a *_pallas_* row's "
+                         "ratio to its jnp/ref counterpart grew beyond "
+                         "--regression-threshold vs the baseline's ratio "
+                         "(host-speed invariant; opt-in)")
     ap.add_argument("--structural", action="store_true",
                     help="with --compare: gate only on errored and "
                          "missing rows, never on timing regressions "
@@ -67,6 +78,9 @@ def main() -> None:
         ap.error(f"--impl must be one of {IMPLS}, got {args.impl!r}")
     if args.structural and not args.compare:
         ap.error("--structural only makes sense with --compare")
+    if args.perf_gate and not args.compare:
+        ap.error("--perf-gate needs --compare (the baseline supplies "
+                 "the reference pallas/jnp ratios)")
 
     suites = {
         "topologies": lambda: bench_topologies.run(
@@ -78,7 +92,8 @@ def main() -> None:
             K=5000 if args.quick else 14_000),
         "heterogeneity": lambda: bench_heterogeneity.run(
             K=4000 if args.quick else 12_000),
-        "kernels": lambda: bench_kernels.run(impl=args.impl or None),
+        "kernels": lambda: bench_kernels.run(impl=args.impl or None,
+                                             quick=args.quick),
         "showdown": lambda: bench_showdown.run(
             rounds=150 if args.quick else 1000)
         + bench_showdown.run_lm(rounds=40 if args.quick else 120),
@@ -115,8 +130,65 @@ def main() -> None:
                             structural=args.structural)
         if problems:
             raise SystemExit(2)
+    if args.perf_gate:
+        if _perf_gate(records, args.compare, args.regression_threshold):
+            raise SystemExit(3)
     if failed:
         raise SystemExit(1)
+
+
+def _pallas_ratios(rows: list[dict]) -> dict:
+    """Map each timed ``*_pallas_*`` row to its pallas/counterpart ratio
+    (counterpart = the same-named ``*_jnp_*`` or ``*_ref_*`` row)."""
+    by = {(r["suite"], r["name"]): r["us_per_call"] for r in rows}
+    out = {}
+    for (suite, name), us in by.items():
+        if not us or "_pallas_" not in name:
+            continue
+        for alt in ("_jnp_", "_ref_"):
+            base = by.get((suite, name.replace("_pallas_", alt)))
+            if base:
+                out[(suite, name)] = us / base
+                break
+    return out
+
+
+def _perf_gate(records: list[dict], baseline_path: str,
+               threshold: float) -> list[str]:
+    """Opt-in (``--perf-gate``) pallas/jnp ratio gate.
+
+    For every timed row whose name contains ``_pallas_`` (the fused
+    dispatch path: ``protocol/round_pallas_*``, ``kernel/*_pallas_*``),
+    compute its ratio to the same-named ``_jnp_``/``_ref_`` row from the
+    SAME run, then compare with the identical ratio in the committed
+    baseline JSON; fail when the ratio grew by more than ``threshold``.
+    A ratio-of-ratios cancels absolute host speed, so the gate is valid
+    on runners where raw-timing thresholds are meaningless.  Rows with
+    no counterpart or no baseline ratio are reported, never gated."""
+    with open(baseline_path) as f:
+        base_ratios = _pallas_ratios(json.load(f)["rows"])
+    now_ratios = _pallas_ratios(records)
+    problems: list[str] = []
+    print(f"# --- perf gate (pallas/jnp ratio drift <= +{threshold:.0%} "
+          f"vs baseline) ---", file=sys.stderr)
+    for (suite, name), ratio in sorted(now_ratios.items()):
+        base = base_ratios.get((suite, name))
+        if base is None:
+            print(f"# {suite}/{name}: ratio {ratio:.2f}x (no baseline "
+                  f"ratio — not gated)", file=sys.stderr)
+            continue
+        bad = ratio > base * (1 + threshold)
+        print(f"# {suite}/{name}: ratio {ratio:.2f}x vs baseline "
+              f"{base:.2f}x{' PERF-GATE FAIL' if bad else ''}",
+              file=sys.stderr)
+        if bad:
+            problems.append(name)
+    if problems:
+        print(f"# perf gate FAILS: {len(problems)} pallas ratio(s) "
+              f"regressed beyond +{threshold:.0%}", file=sys.stderr)
+    else:
+        print("# perf gate OK", file=sys.stderr)
+    return problems
 
 
 def _compare(records: list[dict], baseline_path: str,

@@ -15,10 +15,16 @@ Two interchangeable backends, selected with ``impl``:
 * ``"jnp"``    — batched scatter/gather over the dense padded edge arrays
   of a :class:`~repro.core.plan.CommPlan`.  Bit-identical to the historic
   ``runtime.make_rfast_round`` math; the path GSPMD partitions best.
-* ``"pallas"`` — per-node neighbour stacks routed through the fused
-  ``kernels/rfast_update`` Pallas kernel (one VMEM-resident sweep instead
-  of ~8 HBM passes), vmapped over the node axis.  ``interpret`` defaults
-  to True off-TPU so the same code runs everywhere.
+* ``"pallas"`` — the whole round's commit (all N nodes, every ρ/ρ̃ row)
+  in ONE fused ``kernels/rfast_update.grid`` launch: the plan's edge-slot
+  tables become in-kernel gather indices over the flat leaves, so no
+  per-node neighbour stacks are materialized and no per-node kernel is
+  dispatched.  ``interpret`` is the tri-state dispatch override (None =
+  compiled launch on TPU / the fused edge-major jnp program elsewhere —
+  the round's tables are trace-time constants, so off-TPU the emulation
+  needs no slot-major gathers at all; True = the original vmapped
+  per-node kernel in the Pallas interpreter, kept as the tests-only
+  oracle).
 
 The gradient is sampled at the *mixed* point x⁺ (S.2b), so the consensus
 pull runs before the fused commit kernel in both backends; the kernel then
@@ -40,6 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .plan import CommPlan
+from ..kernels.rfast_update import dispatch
+from ..kernels.rfast_update.grid import block_pad_width, commit_grid
 from ..kernels.rfast_update.ops import rfast_commit
 
 __all__ = [
@@ -162,8 +170,9 @@ def make_protocol_round(
     fused kernel commits ρ̃ with a hard ``mask > 0`` threshold, the jnp
     path with the blending form — identical for indicators, divergent for
     fractional weights).  ``gamma`` may be a schedule ``step -> lr``.
-    ``impl`` selects the backend; ``interpret`` (pallas only) defaults to
-    True unless running on TPU.
+    ``impl`` selects the backend; ``interpret`` (pallas only) is the
+    tri-state dispatch override (None = autodetect, True = interpreter
+    oracle, False = force a compiled launch).
 
     ``donate=True`` returns the round jitted with the state argument
     donated: x/z/ρ/ρ̃ update in place instead of double-buffering.  The
@@ -173,8 +182,6 @@ def make_protocol_round(
     """
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     if impl == "jnp":
         round_fn = _make_round_jnp(plan, vgrads, gamma, robust, momentum)
     else:
@@ -270,14 +277,18 @@ def _make_round_jnp(plan: CommPlan, vgrads: VGradFn, gamma, robust, momentum):
 
 
 # --------------------------------------------------------------------- #
-# impl="pallas": per-node stacks through the fused rfast_update kernel
+# impl="pallas": one fused grid launch per round over the flat leaves
 # --------------------------------------------------------------------- #
 def _make_round_pallas(plan: CommPlan, vgrads: VGradFn, gamma, robust,
                        momentum, interpret):
+    mode = dispatch.resolve_mode(interpret)
     n, e_pad = plan.n, plan.e_pad
     kw, ka, ko = plan.kw, plan.ka, plan.ko
     w_diag = jnp.asarray(plan.w_diag)
     a_diag = jnp.asarray(plan.a_diag)
+    src_a = jnp.asarray(plan.src_a)
+    dst_a = jnp.asarray(plan.dst_a)
+    a_edge = jnp.asarray(plan.a_edge)
     src_w = jnp.asarray(plan.src_w)
     in_w_epos = jnp.asarray(plan.in_w_epos)
     in_w_src = jnp.asarray(plan.in_w_src)
@@ -366,7 +377,7 @@ def _make_round_pallas(plan: CommPlan, vgrads: VGradFn, gamma, robust,
         def one_node(z_, gn_, go_, ri_, rb_, mki_, ro_, ao_, as_):
             return rfast_commit(
                 z_, gn_, go_, ri_, rb_, mki_, ro_, ao_, a_self=as_,
-                impl="pallas", interpret=interpret)
+                impl="pallas", interpret=True)
 
         for idxs in groups.values():
             flat2 = lambda ls, lead: jnp.concatenate(
@@ -377,20 +388,61 @@ def _make_round_pallas(plan: CommPlan, vgrads: VGradFn, gamma, robust,
             rho_f = flat2(rho_leaves, e_pad)
             buf_f = flat2(buf_leaves, e_pad)
 
-            z_out, rout_new, rbuf_new = jax.vmap(one_node)(
-                z_f, gn_f, go_f,
-                rho_f[in_a_epos], buf_f[in_a_epos], mask_in,
-                rho_f[out_a_epos], out_a_wt, a_diag)
+            if mode == "emulate":
+                # Plan tables are trace-time CONSTANTS here (unlike the
+                # engines' per-wave traced tables), so the grid twin's
+                # honest CPU lowering is the fused edge-major program:
+                # the TPU launch streams its gather blocks and never
+                # materializes (N, k, P) neighbour stacks, and neither
+                # should its emulation — same S.2b/c + S.4 blend, row
+                # for row, bit-identical to the impl="jnp" track.
+                mkr = mk[:, None]
+                diff = (mkr * (rho_f - buf_f)).astype(z_f.dtype)
+                recv = jnp.zeros_like(z_f).at[dst_a].add(diff)
+                z_half = tracking_step(z_f, recv, gn_f, go_f)
+                z_out = a_diag[:, None] * z_half
+                push = a_edge[:, None] * z_half[src_a]
+                rho_new_f = rho_f + push.astype(rho_f.dtype)
+                buf_new_f = mailbox_merge(rho_f, buf_f, mkr)
+            elif mode == "interpret":
+                # per-node kernel in the interpreter: the oracle path
+                z_out, rout_new, rbuf_new = jax.vmap(one_node)(
+                    z_f, gn_f, go_f,
+                    rho_f[in_a_epos], buf_f[in_a_epos], mask_in,
+                    rho_f[out_a_epos], out_a_wt, a_diag)
+            else:
+                # ONE grid launch for the whole round: the edge-slot
+                # tables gather rows of the flat leaves in-kernel
+                P = z_f.shape[1]
+                Pp = block_pad_width(P)
+                if Pp != P:
+                    wp = lambda a: jnp.pad(a, ((0, 0), (0, Pp - P)))
+                    z_f2, gn_f2, go_f2 = wp(z_f), wp(gn_f), wp(go_f)
+                    rho_f2, buf_f2 = wp(rho_f), wp(buf_f)
+                else:
+                    z_f2, gn_f2, go_f2 = z_f, gn_f, go_f
+                    rho_f2, buf_f2 = rho_f, buf_f
+                node_ids = jnp.arange(n, dtype=jnp.int32)
+                z_out, rout_new, rbuf_new = commit_grid(
+                    node_ids, node_ids, in_a_epos, in_a_epos, out_a_epos,
+                    a_diag, mask_in, out_a_wt,
+                    z_f2, gn_f2, go_f2, rho_f2, buf_f2, rho_f2, mode=mode)
+                if Pp != P:
+                    z_out = z_out[:, :P]
+                    rout_new = rout_new[..., :P]
+                    rbuf_new = rbuf_new[..., :P]
 
-            # scatter per-node slot results back to the edge-major arrays
-            # (each real edge is owned by exactly one (node, slot) pair;
-            # pad slots target index e_pad and are dropped)
-            rho_new_f = rho_f.at[out_scatter].set(
-                rout_new.astype(rho_f.dtype).reshape(n * ko, -1),
-                mode="drop")
-            buf_new_f = buf_f.at[in_scatter].set(
-                rbuf_new.astype(buf_f.dtype).reshape(n * ka, -1),
-                mode="drop")
+            if mode != "emulate":
+                # scatter per-node slot results back to the edge-major
+                # arrays (each real edge is owned by exactly one
+                # (node, slot) pair; pad slots target index e_pad and
+                # are dropped)
+                rho_new_f = rho_f.at[out_scatter].set(
+                    rout_new.astype(rho_f.dtype).reshape(n * ko, -1),
+                    mode="drop")
+                buf_new_f = buf_f.at[in_scatter].set(
+                    rbuf_new.astype(buf_f.dtype).reshape(n * ka, -1),
+                    mode="drop")
 
             off = 0
             for i in idxs:

@@ -29,7 +29,8 @@ from .topology import Topology
 
 __all__ = ["Schedule", "WavefrontPlan", "build_wavefront_plan",
            "pad_plan", "stack_plans", "slice_plan", "concat_plans",
-           "flatten_plans", "generate_schedule", "round_robin_schedule"]
+           "flatten_plans", "grid_gather_tables", "generate_schedule",
+           "round_robin_schedule"]
 
 
 @dataclasses.dataclass
@@ -357,6 +358,34 @@ def flatten_plans(stacked: WavefrontPlan) -> WavefrontPlan:
                      + np.arange(S, dtype=np.int64)[:, None] * K).min(0),
         sizes=stacked.sizes.sum(0).astype(np.int32),
     )
+
+
+def grid_gather_tables(agent, rslot_rho, hist_epos, rho_gidx, *,
+                       e_a_flat: int, ko: int):
+    """Flat-row gather tables for the fleet-grid commit kernel.
+
+    Translates one wave's lane tables (slices of a — possibly
+    fleet-flattened — :class:`WavefrontPlan`) into row indices over the
+    flat device state the grid kernel reads directly:
+
+    * ``idx_z``/``idx_g`` — rows of ``nodes.reshape(N·4, p)`` (node
+      layout x, v, z, g_prev → z at ``4a+2``, g_prev at ``4a+3``),
+    * ``idx_ri``          — rows of ``rho_hist.reshape(H·E, p)``
+      (``slot·E + epos``),
+    * ``idx_ro``/``idx_rb`` — the ρ-out / ρ̃ halves of ``rho_gidx``
+      (rows of the flat ``(2E, p)`` ρ state; the split mirrors the
+      plan's ko-first row ordering).
+
+    ``e_a_flat`` is the flat ρ half-size E (``S·e_a`` after
+    :func:`flatten_plans`).  Sentinel entries pass through untranslated
+    (``commit_grid`` clamps reads; commits drop at the caller's
+    scatters).  Works on numpy arrays and jax tracers alike.
+    """
+    agent = agent.astype("int32") * 4
+    return (agent + 2, agent + 3,
+            rslot_rho.astype("int32") * e_a_flat
+            + hist_epos.astype("int32"),
+            rho_gidx[..., ko:], rho_gidx[..., :ko])
 
 
 def stack_plans(plans: "list[WavefrontPlan]") -> WavefrontPlan:

@@ -58,12 +58,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.rfast_update import dispatch
+from ..kernels.rfast_update.grid import block_pad_width, commit_grid
 from ..kernels.rfast_update.ops import rfast_commit
 from .paramvec import GradProvider, as_grad_fn
 from .plan import CommPlan, as_comm_plan, pad_comm_plan
 from .protocol import consensus_mix, descent_step, mailbox_merge, tracking_step
 from .schedule import (Schedule, build_wavefront_plan, concat_plans,
-                       flatten_plans, pad_plan, slice_plan, stack_plans)
+                       flatten_plans, grid_gather_tables, pad_plan,
+                       slice_plan, stack_plans)
 from .topology import Topology
 
 __all__ = ["RFASTState", "PackedState", "init_state", "zeros_state",
@@ -290,13 +293,19 @@ class _WaveInputs(NamedTuple):
     keys: jnp.ndarray       # (B, 2)
 
 
-def pack_state(state: RFASTState, *, e_a: int | None = None) -> PackedState:
+def pack_state(state: RFASTState, *, e_a: int | None = None,
+               p_pad: int | None = None) -> PackedState:
     """Device layout for the wavefront/sweep engines.
 
     ``e_a`` pads the ρ state to a larger flat layout (fleet sweeps
     normalize every lane to the fleet-wide max A-edge count; the extra
     zero rows are never referenced by a real lane and the matching
     WavefrontPlan must be built/padded against the same ``e_a``).
+
+    ``p_pad`` zero-pads the flat parameter axis (the compiled grid
+    kernel needs block-multiple widths; the zero tail is inert under the
+    linear protocol — pass the real ``p`` back via the engines'
+    ``p_real`` / :func:`unpack_state`'s ``p``).
     """
     rho, rho_buf, rho_hist = state.rho, state.rho_buf, state.rho_hist
     if e_a is not None and e_a != rho.shape[0]:
@@ -307,16 +316,27 @@ def pack_state(state: RFASTState, *, e_a: int | None = None) -> PackedState:
         rho = jnp.pad(rho, ((0, pad), (0, 0)))
         rho_buf = jnp.pad(rho_buf, ((0, pad), (0, 0)))
         rho_hist = jnp.pad(rho_hist, ((0, 0), (0, pad), (0, 0)))
-    return PackedState(
+    packed = PackedState(
         nodes=jnp.stack([state.x, state.v, state.z, state.g_prev], axis=1),
         rho2=jnp.concatenate([rho, rho_buf], axis=0),
         v_hist=state.v_hist,
         rho_hist=rho_hist,
     )
+    p = packed.nodes.shape[-1]
+    if p_pad is not None and p_pad != p:
+        if p_pad < p:
+            raise ValueError(f"p_pad={p_pad} < state's p={p}")
+        wpad = lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 1)
+                                 + [(0, p_pad - p)])
+        packed = PackedState(*(wpad(a) for a in packed))
+    return packed
 
 
-def unpack_state(packed: PackedState, k) -> RFASTState:
+def unpack_state(packed: PackedState, k, *, p: int | None = None
+                 ) -> RFASTState:
     e_a = packed.rho_hist.shape[1]
+    if p is not None and p != packed.nodes.shape[-1]:
+        packed = PackedState(*(a[..., :p] for a in packed))
     return RFASTState(
         k=jnp.asarray(k, jnp.int32),
         x=packed.nodes[:, 0], v=packed.nodes[:, 1],
@@ -334,7 +354,8 @@ def _wave_step(
     gamma: float,
     ko: int,
     impl: str = "jnp",
-    interpret: bool = True,
+    mode: str = "emulate",
+    p_real: int | None = None,
 ) -> tuple[PackedState, None]:
     """One wavefront: B independent per-agent updates (distinct agents,
     pre-wavefront reads only — see build_wavefront_plan), committed as
@@ -344,11 +365,21 @@ def _wave_step(
     arrays.
 
     ``impl="pallas"`` routes the S.2b/c + S.4 commit math (the
-    bandwidth-bound tail) through the fused ``rfast_commit`` kernel,
-    vmapped per lane over the flat parameter buffer — the same kernel
-    the production protocol round uses.  The consensus pull stays in
+    bandwidth-bound tail) through ONE fused :func:`commit_grid` launch
+    for the whole wave — the lane tables become flat-row gather indices
+    into the packed state (``nodes.reshape(N·4, p)``,
+    ``rho_hist.reshape(H·E, p)``, ``rho2``), so no per-lane neighbour
+    stacks are materialized and no per-lane kernel is dispatched.
+    ``mode`` is the resolved dispatch mode: ``interpret`` keeps the
+    original vmapped per-node kernel as the bit-faithful oracle;
+    ``compiled``/``emulate`` take the grid.  The consensus pull stays in
     jnp either way: the gradient must be sampled at the mixed point x⁺
     before the commit runs.
+
+    ``p_real`` (< p only when the flat axis was block-padded for the
+    compiled grid) slices the parameter tail off before ``grad_fn`` and
+    zero-pads the gradient back — the pad tail stays exactly zero under
+    the linear protocol.
     """
     node_rows = state.nodes[w.agent]                       # (B, 4, p)
     x_l, z_l, gp_l = node_rows[:, 0], node_rows[:, 2], node_rows[:, 3]
@@ -363,24 +394,46 @@ def _wave_step(
                         vals_v.swapaxes(0, 1))             # sum over kw
 
     # (S.2b) robust gradient tracking -------------------------------------
-    g_new = jax.vmap(grad_fn)(w.agent, x_a, w.keys)
-    vals_rho = state.rho_hist[w.rslot_rho, w.hist_epos]    # (B, ka, p)
-    rho_rows = state.rho2[w.rho_gidx]                      # (B, ko+ka, p)
+    p = x_a.shape[-1]
+    if p_real is not None and p_real != p:
+        g_new = jax.vmap(grad_fn)(w.agent, x_a[:, :p_real], w.keys)
+        g_new = jnp.pad(g_new, ((0, 0), (0, p - p_real)))
+    else:
+        g_new = jax.vmap(grad_fn)(w.agent, x_a, w.keys)
 
-    if impl == "pallas":
-        # fused commit: z½/z'/ρ'/ρ̃' in one kernel sweep per lane.  The
-        # kernel's masked ρ̃ blend equals the jnp path's unconditional
-        # vals_rho commit: a_val is a 0/1 indicator and zero-mask rows
-        # scatter to the drop sentinel anyway.
+    if impl == "pallas" and mode != "interpret":
+        # one fused launch for the whole wave: gather tables over the
+        # flat state rows.  The kernel's masked ρ̃ blend equals the jnp
+        # path's unconditional vals_rho commit: a_val is a 0/1 indicator
+        # and zero-mask rows scatter to the drop sentinel anyway.
+        # Sentinel lanes clamp inside commit_grid; their commits drop.
+        nodes_flat = state.nodes.reshape(-1, p)            # (N·4, p)
+        hist_flat = state.rho_hist.reshape(-1, p)          # (H·E, p)
+        idx_z, idx_g, idx_ri, idx_rb, idx_ro = grid_gather_tables(
+            w.agent, w.rslot_rho, w.hist_epos, w.rho_gidx,
+            e_a_flat=state.rho_hist.shape[1], ko=ko)
+        z_a, rho_new, buf_new = commit_grid(
+            idx_z, idx_g, idx_ri, idx_rb, idx_ro,
+            w.a_self, w.a_val, w.out_wt,
+            nodes_flat, g_new, nodes_flat, hist_flat,
+            state.rho2, state.rho2, mode=mode)
+        rho_commit = jnp.concatenate([rho_new, buf_new], axis=1)
+    elif impl == "pallas":
+        # interpret-mode oracle: the original vmapped per-node kernel.
+        vals_rho = state.rho_hist[w.rslot_rho, w.hist_epos]  # (B, ka, p)
+        rho_rows = state.rho2[w.rho_gidx]                    # (B, ko+ka, p)
+
         def one_lane(z_, gn_, go_, ri_, rb_, mk_, ro_, ao_, as_):
             return rfast_commit(z_, gn_, go_, ri_, rb_, mk_, ro_, ao_,
                                 a_self=as_, impl="pallas",
-                                interpret=interpret)
+                                interpret=True)
         z_a, rho_new, buf_new = jax.vmap(one_lane)(
             z_l, g_new, gp_l, vals_rho, rho_rows[:, ko:], w.a_val,
             rho_rows[:, :ko], w.out_wt, w.a_self)
         rho_commit = jnp.concatenate([rho_new, buf_new], axis=1)
     else:
+        vals_rho = state.rho_hist[w.rslot_rho, w.hist_epos]  # (B, ka, p)
+        rho_rows = state.rho2[w.rho_gidx]                    # (B, ko+ka, p)
         recv = jnp.sum(w.a_val[..., None]
                        * (vals_rho - rho_rows[:, ko:]), axis=1)
         z_half = tracking_step(z_l, recv, g_new, gp_l)
@@ -410,6 +463,7 @@ def rfast_wavefront_scan(
     donate: bool = True,
     impl: str = "jnp",
     interpret: bool | None = None,
+    p_real: int | None = None,
 ):
     """Wavefront engine: a jitted ``(packed, wave_inputs) -> packed`` where
     ``wave_inputs`` is a :class:`_WaveInputs` of ``(n_waves, B, ...)``
@@ -417,19 +471,21 @@ def rfast_wavefront_scan(
     state is donated by default (the histories update in place; callers
     rebind).
 
-    ``impl="pallas"`` commits each lane through the fused
-    ``kernels/rfast_update`` commit kernel on the flat parameter buffer
-    (``interpret`` defaults to True off-TPU, matching the protocol
-    round's convention); ``impl="jnp"`` is the scatter/gather path.
+    ``impl="pallas"`` commits every wave through ONE fused grid launch
+    (:func:`repro.kernels.rfast_update.grid.commit_grid`); ``interpret``
+    is the tri-state dispatch override (None = autodetect: compiled on
+    TPU, jnp emulation elsewhere; True = the vmapped per-node kernel in
+    the Pallas interpreter, the tests-only oracle).  ``impl="jnp"`` is
+    the scatter/gather path.  ``p_real`` marks a block-padded flat axis
+    (see :func:`_wave_step`).
     """
     if impl not in ("jnp", "pallas"):
         raise ValueError(f"impl must be 'jnp' or 'pallas', got {impl!r}")
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    mode = dispatch.resolve_mode(interpret) if impl == "pallas" else "emulate"
     grad_fn = as_grad_fn(grad_fn)
     plan = as_comm_plan(topo)
     step = partial(_wave_step, grad_fn=grad_fn, gamma=gamma, ko=plan.ko,
-                   impl=impl, interpret=interpret)
+                   impl=impl, mode=mode, p_real=p_real)
 
     def run_waves(state: PackedState, waves: _WaveInputs):
         state, _ = jax.lax.scan(step, state, waves)
@@ -463,6 +519,7 @@ def rfast_sweep_scan(
     donate: bool = True,
     impl: str = "jnp",
     interpret: bool | None = None,
+    p_real: int | None = None,
 ):
     """Fleet engine: a jitted ``(packed, wave_inputs) -> packed`` over a
     fleet-FLATTENED plan (:func:`repro.core.schedule.flatten_plans`).
@@ -471,19 +528,21 @@ def rfast_sweep_scan(
     width S·B over block-concatenated state (nodes ``(S·n, 4, p)``, ρ
     ``(2·S·e_a, p)``): lanes were made disjoint by index offsetting
     host-side, so the scan body is :func:`_wave_step` itself — no fleet
-    vmap, and the compile cost matches ONE run, not S.  ``grad_fn``
+    vmap, and the compile cost matches ONE run, not S.  With
+    ``impl="pallas"`` the whole fleet wave therefore commits as ONE
+    grid launch spanning (lane × wave-slot) × p-tiles.  ``grad_fn``
     still sees lane-local node ids (the flat agent id is
     ``s·n_per_lane + a``, reduced mod ``n_per_lane`` before the call);
-    ``ko`` is the fleet-wide max A out-degree.
+    ``ko`` is the fleet-wide max A out-degree.  ``interpret``/``p_real``
+    as in :func:`rfast_wavefront_scan`.
     """
     if impl not in ("jnp", "pallas"):
         raise ValueError(f"impl must be 'jnp' or 'pallas', got {impl!r}")
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    mode = dispatch.resolve_mode(interpret) if impl == "pallas" else "emulate"
     grad_fn = as_grad_fn(grad_fn)
     lane_grad = lambda i, x, key: grad_fn(i % n_per_lane, x, key)
     step = partial(_wave_step, grad_fn=lane_grad, gamma=gamma, ko=ko,
-                   impl=impl, interpret=interpret)
+                   impl=impl, mode=mode, p_real=p_real)
 
     def run_waves(state: PackedState, waves: _WaveInputs):
         state, _ = jax.lax.scan(step, state, waves)
@@ -509,6 +568,7 @@ def run_rfast(
     eval_fn: Callable[[RFASTState, float], dict] | None = None,
     mode: str = "wavefront",
     impl: str = "jnp",
+    interpret: bool | None = None,
     state0: RFASTState | None = None,
     chunk_cb: Callable[[RFASTState, int], None] | None = None,
 ) -> tuple[RFASTState, list[dict]]:
@@ -538,6 +598,12 @@ def run_rfast(
     would silently realize a wrong trajectory.  The first ``state0.k``
     events are skipped (the RNG key derivation is identical to the
     fresh run, so a resumed run continues the exact trajectory).
+
+    ``interpret`` (pallas only) is the tri-state dispatch override:
+    None autodetects (compiled grid launch on TPU, jnp emulation of the
+    grid elsewhere); True forces the interpreter oracle.  In compiled
+    mode the flat parameter axis is transparently block-padded for the
+    kernel and stripped again before ``grad_fn``/``eval_fn``/return.
 
     Both modes donate the running state between chunks (in-place
     updates): ``eval_fn`` must extract what it needs (floats/arrays of
@@ -595,11 +661,20 @@ def run_rfast(
                 chunk_cb(state, e)       # event engine tracks k == e itself
         return state, metrics
 
+    # compiled grid launches need a block-multiple flat width: pad the
+    # parameter axis once up front (the zero tail is provably inert) and
+    # strip it at every unpack below
+    p = int(state.x.shape[-1])
+    p_pad = p
+    if impl == "pallas" and dispatch.resolve_mode(interpret) == "compiled":
+        p_pad = block_pad_width(p)
+
     wf = build_wavefront_plan(schedule, plan, H, break_every=eval_every)
-    runner = rfast_wavefront_scan(plan, grad_fn, gamma, donate=True,
-                                  impl=impl)
+    runner = rfast_wavefront_scan(
+        plan, grad_fn, gamma, donate=True, impl=impl, interpret=interpret,
+        p_real=(p if p_pad != p else None))
     waves = wave_inputs(wf, step_keys)
-    packed = pack_state(state)
+    packed = pack_state(state, p_pad=(p_pad if p_pad != p else None))
 
     # chunk boundaries in wave space (waves never cross eval boundaries);
     # pad every chunk to the max wave count so the runner compiles once
@@ -631,23 +706,28 @@ def run_rfast(
         packed = runner(packed, chunk_waves)
         e = min(K, (ci + 1) * eval_every)
         if eval_fn is not None:
-            m = eval_fn(unpack_state(packed, e), float(schedule.times[e - 1]))
+            m = eval_fn(unpack_state(packed, e, p=p),
+                        float(schedule.times[e - 1]))
             m["k"] = e
             metrics.append(m)
         if chunk_cb is not None:
-            chunk_cb(unpack_state(packed, e), e)
-    return unpack_state(packed, K), metrics
+            chunk_cb(unpack_state(packed, e, p=p), e)
+    return unpack_state(packed, K, p=p), metrics
 
 
 # --------------------------------------------------------------------- #
 # fleet sweeps: many experiments as one compiled wavefront program
 # --------------------------------------------------------------------- #
 def _lane_state(packed: PackedState, s: int, k: int, *, S: int, n: int,
-                e_a: int, e_a_lane: int) -> RFASTState:
+                e_a: int, e_a_lane: int,
+                p: int | None = None) -> RFASTState:
     """Slice fleet lane ``s`` out of the flat fleet state (lane blocks:
     nodes ``[s·n, (s+1)·n)``, ρ ``[s·e_a, ·)`` with ρ̃ at offset
     ``S·e_a``) and strip its ρ state back to the lane's real A-edge
-    count (the fleet layout pads every lane to the max)."""
+    count (the fleet layout pads every lane to the max).  ``p`` strips a
+    block-padded flat axis back to the real dimension."""
+    if p is not None and p != packed.nodes.shape[-1]:
+        packed = PackedState(*(a[..., :p] for a in packed))
     nd = packed.nodes[s * n:(s + 1) * n]
     rho = packed.rho2[s * e_a:s * e_a + e_a_lane]
     rho_buf = packed.rho2[(S + s) * e_a:(S + s) * e_a + e_a_lane]
@@ -671,6 +751,7 @@ def run_sweep(
     eval_every: int = 0,
     eval_fn: Callable[[RFASTState, float], dict] | None = None,
     impl: str = "jnp",
+    interpret: bool | None = None,
 ) -> tuple[list[RFASTState], list[list[dict]]]:
     """Run a fleet of S independent experiments as ONE compiled program.
 
@@ -701,8 +782,10 @@ def run_sweep(
       eval_every / eval_fn: as in :func:`run_rfast`, evaluated per lane —
         the metrics come back as one list per lane, each entry stamped
         with that lane's own virtual time.
-      impl: ``"pallas"`` commits every (lane, event) through the fused
-        ``rfast_commit`` kernel, vmapped across the fleet.
+      impl: ``"pallas"`` commits every fleet wave — all lanes, all wave
+        slots — through ONE fused grid launch.
+      interpret: tri-state dispatch override (None = compiled on TPU /
+        jnp grid emulation elsewhere; True = interpreter oracle).
 
     Returns:
       ``(states, metrics)`` — the final per-lane :class:`RFASTState` list
@@ -753,6 +836,10 @@ def run_sweep(
     x0_lanes = (x0 if x0.ndim == 3
                 else jnp.broadcast_to(x0[None], (S,) + x0.shape))
     p = int(x0_lanes.shape[-1])
+    # compiled grid launches need block-multiple widths (inert zero tail)
+    p_pad = p
+    if impl == "pallas" and dispatch.resolve_mode(interpret) == "compiled":
+        p_pad = block_pad_width(p)
     lane_keys, init_keys = [], []
     for s in range(S):
         key, init_key = jax.random.split(jax.random.PRNGKey(seeds[s]))
@@ -774,11 +861,13 @@ def run_sweep(
     )(x0_lanes, node_keys)
     nodes = jnp.stack([x0_lanes, jnp.zeros_like(x0_lanes), g0, g0],
                       axis=2)
+    if p_pad != p:
+        nodes = jnp.pad(nodes, ((0, 0), (0, 0), (0, 0), (0, p_pad - p)))
     z = lambda *s_: jnp.zeros(s_, jnp.float32)
-    packed = PackedState(nodes=nodes.reshape(S * n, 4, p),
-                         rho2=z(2 * S * e_a, p),
-                         v_hist=z(H, S * n, p),
-                         rho_hist=z(H, S * e_a, p))
+    packed = PackedState(nodes=nodes.reshape(S * n, 4, p_pad),
+                         rho2=z(2 * S * e_a, p_pad),
+                         v_hist=z(H, S * n, p_pad),
+                         rho_hist=z(H, S * e_a, p_pad))
 
     # per-lane plans, then chunk-aligned fleet stacking: chunk c of every
     # lane is padded to the fleet-wide max chunk wave count, so chunk c
@@ -803,9 +892,10 @@ def run_sweep(
     waves = wave_inputs(fleet, step_keys.reshape(S * K, 2))
 
     runner = rfast_sweep_scan(grad_fn, gamma, ko=ko, n_per_lane=n,
-                              donate=True, impl=impl)
+                              donate=True, impl=impl, interpret=interpret,
+                              p_real=(p if p_pad != p else None))
     metrics: list[list[dict]] = [[] for _ in range(S)]
-    lane_kw = dict(S=S, n=n, e_a=e_a)
+    lane_kw = dict(S=S, n=n, e_a=e_a, p=p)
     e_a_lane = [max(1, pl.n_edges_a) for pl in plans]
     for ci in range(len(chunk_starts)):
         w = jax.tree.map(lambda a: a[ci * cmax:(ci + 1) * cmax], waves)

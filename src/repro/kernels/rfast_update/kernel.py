@@ -19,7 +19,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import dispatch
+
 __all__ = ["rfast_update_pallas", "rfast_commit_pallas", "BLK_R", "LANE"]
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """None → autodetect: real launch on TPU, interpreter elsewhere."""
+    if interpret is None:
+        return dispatch.resolve_mode(None) != "compiled"
+    return bool(interpret)
 
 BLK_R = 256     # rows per block (8-aligned for fp32 sublanes)
 LANE = 128      # TPU lane width
@@ -102,10 +111,11 @@ def _commit_kernel(scal_ref, mask_ref, a_out_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def rfast_commit_pallas(z, g_new, g_old, rho_in, rho_buf, mask, rho_out,
-                        a_out, scalars, *, interpret=True):
+                        a_out, scalars, *, interpret=None):
     """Commit-only launch: operands as in :func:`rfast_update_pallas`
     minus x/v_in/w_in; scalars (1, 1) = [a_self].
     Returns (z', rho_out', rho_buf')."""
+    interpret = _resolve_interpret(interpret)
     R = z.shape[0]
     grid = (R // BLK_R,)
     blk = lambda: pl.BlockSpec((BLK_R, LANE), lambda i: (i, 0))
@@ -131,12 +141,13 @@ def rfast_commit_pallas(z, g_new, g_old, rho_in, rho_buf, mask, rho_out,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def rfast_update_pallas(x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf,
-                        mask, rho_out, a_out, scalars, *, interpret=True):
+                        mask, rho_out, a_out, scalars, *, interpret=None):
     """All 2-D operands shaped (R, 128); stacks (K, R, 128); R % BLK_R == 0.
 
     scalars: (1, 3) = [gamma, w_self, a_self]; w_in (1, Kw); mask (1, Ka);
     a_out (1, Ko).  Returns (x', v, z', rho_out', rho_buf').
     """
+    interpret = _resolve_interpret(interpret)
     R = x.shape[0]
     grid = (R // BLK_R,)
     blk = lambda: pl.BlockSpec((BLK_R, LANE), lambda i: (i, 0))

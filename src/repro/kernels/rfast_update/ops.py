@@ -1,8 +1,19 @@
 """jit'd public wrapper: flat-vector (and pytree) R-FAST update.
 
 Handles padding/reshaping to the kernel's (R, 128) layout and exposes a
-``ref``/``pallas`` switch (pallas runs in interpret mode on CPU; on TPU
-pass interpret=False).
+``ref``/``pallas`` switch.  ``impl="pallas"`` resolves through the
+three-mode dispatch in :mod:`.dispatch`: ``interpret=None`` (default)
+autodetects — the real compiled launch on TPU, the jnp emulation of the
+grid data flow elsewhere — ``interpret=True`` forces the Pallas
+interpreter (the slow bit-faithful oracle, tests only), and
+``interpret=False`` forces a compiled launch.
+
+The commit path (``rfast_commit`` and ``outputs="commit"``) routes
+through the fleet-grid kernel (:func:`.grid.commit_grid`) at lane count
+B=1 except in interpret mode, which keeps the original per-node kernel
+as the oracle.  The full-outputs pallas path has no grid twin; in
+emulate mode it falls back to the jnp reference (same math by
+construction).
 """
 from __future__ import annotations
 
@@ -11,6 +22,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from . import dispatch
+from .grid import block_pad_width, commit_grid
 from .kernel import (BLK_R, LANE, rfast_commit_pallas, rfast_update_pallas)
 from .ref import rfast_commit_ref, rfast_update_ref
 
@@ -33,7 +46,7 @@ def unpad(v: jax.Array, P: int) -> jax.Array:
 @partial(jax.jit, static_argnames=("impl", "interpret", "outputs"))
 def rfast_update(x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask,
                  rho_out, a_out, *, gamma, w_self, a_self,
-                 impl: str = "ref", interpret: bool = True,
+                 impl: str = "ref", interpret: bool | None = None,
                  outputs: str = "full"):
     """Flat-vector protocol update; see ref.py for the math.
 
@@ -56,6 +69,14 @@ def rfast_update(x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask,
             x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask, rho_out,
             a_out, gamma=gamma, w_self=w_self, a_self=a_self)
 
+    mode = dispatch.resolve_mode(interpret)
+    if mode == "emulate":
+        # No grid twin for the x'/v streams: the jnp reference IS the
+        # emulation (identical expressions, fp32 accumulation).
+        return rfast_update_ref(
+            x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask, rho_out,
+            a_out, gamma=gamma, w_self=w_self, a_self=a_self)
+
     xb, P = pad_to_blocks(x)
     zb, _ = pad_to_blocks(z)
     gnb, _ = pad_to_blocks(g_new)
@@ -68,7 +89,8 @@ def rfast_update(x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask,
     out = rfast_update_pallas(
         xb, zb, gnb, gob, vib, w_in[None].astype(jnp.float32),
         rib, rbb, mask[None].astype(jnp.float32), rob,
-        a_out[None].astype(jnp.float32), scal, interpret=interpret)
+        a_out[None].astype(jnp.float32), scal,
+        interpret=(mode == "interpret"))
     x_n, v_n, z_n, ro_n, rb_n = out
     return (unpad(x_n, P), unpad(v_n, P), unpad(z_n, P),
             unpad(ro_n, P), unpad(rb_n, P))
@@ -76,21 +98,47 @@ def rfast_update(x, z, g_new, g_old, v_in, w_in, rho_in, rho_buf, mask,
 
 @partial(jax.jit, static_argnames=("impl", "interpret"))
 def rfast_commit(z, g_new, g_old, rho_in, rho_buf, mask, rho_out, a_out, *,
-                 a_self, impl: str = "ref", interpret: bool = True):
+                 a_self, impl: str = "ref", interpret: bool | None = None):
     """Commit-only protocol update: the S.2b–S.4 tail of
     :func:`rfast_update` without the x'/v streams (see ref.py).
     Returns (z', rho_out', rho_buf')."""
     if impl == "ref":
         return rfast_commit_ref(z, g_new, g_old, rho_in, rho_buf, mask,
                                 rho_out, a_out, a_self=a_self)
-    zb, P = pad_to_blocks(z)
-    gnb, _ = pad_to_blocks(g_new)
-    gob, _ = pad_to_blocks(g_old)
-    rib, _ = pad_to_blocks(rho_in)
-    rbb, _ = pad_to_blocks(rho_buf)
-    rob, _ = pad_to_blocks(rho_out)
-    scal = jnp.asarray([[a_self]], jnp.float32)
-    z_n, ro_n, rb_n = rfast_commit_pallas(
-        zb, gnb, gob, rib, rbb, mask[None].astype(jnp.float32), rob,
-        a_out[None].astype(jnp.float32), scal, interpret=interpret)
-    return unpad(z_n, P), unpad(ro_n, P), unpad(rb_n, P)
+    mode = dispatch.resolve_mode(interpret)
+    if mode == "interpret":
+        # Per-node kernel in the Pallas interpreter: the oracle path.
+        zb, P = pad_to_blocks(z)
+        gnb, _ = pad_to_blocks(g_new)
+        gob, _ = pad_to_blocks(g_old)
+        rib, _ = pad_to_blocks(rho_in)
+        rbb, _ = pad_to_blocks(rho_buf)
+        rob, _ = pad_to_blocks(rho_out)
+        scal = jnp.asarray([[a_self]], jnp.float32)
+        z_n, ro_n, rb_n = rfast_commit_pallas(
+            zb, gnb, gob, rib, rbb, mask[None].astype(jnp.float32), rob,
+            a_out[None].astype(jnp.float32), scal, interpret=True)
+        return unpad(z_n, P), unpad(ro_n, P), unpad(rb_n, P)
+
+    # Grid path at lane count B=1: identity gather tables, one launch.
+    ka, P = rho_in.shape
+    ko = rho_out.shape[0]
+    z1, gn1, go1 = z[None], g_new[None], g_old[None]
+    ri, rb, ro = rho_in, rho_buf, rho_out
+    if mode == "compiled":
+        Pp = block_pad_width(P)
+        if Pp != P:
+            pad = lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 1)
+                                    + [(0, Pp - P)])
+            z1, gn1, go1 = pad(z1), pad(gn1), pad(go1)
+            ri, rb, ro = pad(ri), pad(rb), pad(ro)
+    zero = jnp.zeros((1,), jnp.int32)
+    z_n, ro_n, rb_n = commit_grid(
+        zero, zero,
+        jnp.arange(ka, dtype=jnp.int32)[None],
+        jnp.arange(ka, dtype=jnp.int32)[None],
+        jnp.arange(ko, dtype=jnp.int32)[None],
+        jnp.asarray(a_self, jnp.float32)[None],
+        mask[None], a_out[None],
+        z1, gn1, go1, ri, rb, ro, mode=mode)
+    return z_n[0, :P], ro_n[0, :, :P], rb_n[0, :, :P]

@@ -23,7 +23,8 @@ checkpointing, in one of two execution regimes:
         --arch rfast-100m --reduced --nodes 4 --steps 200 --scenario straggler
 
 ``--impl pallas`` commits the protocol state through the fused
-``kernels/rfast_update`` Pallas kernel (interpret mode off-TPU) in both
+``kernels/rfast_update`` grid launch (compiled on TPU, its jnp
+emulation twin off-TPU — see kernels/rfast_update/dispatch.py) in both
 regimes; the default ``--impl jnp`` is the dense/scatter path.  Both are
 the same protocol (core/protocol.py) over the same CommPlan.
 """

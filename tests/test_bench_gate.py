@@ -108,3 +108,52 @@ def test_gate_ignores_zero_or_errored_baseline_rows(tmp_path):
     ])
     records = [_row("sim", "was_broken", 10.0), _row("sim", "was_zero", 9.0)]
     assert bench_run._compare(records, base, 0.25) == []
+
+
+def test_perf_gate_ratio_of_ratios(tmp_path):
+    """--perf-gate compares each *_pallas_* row's ratio to its jnp/ref
+    counterpart against the SAME ratio in the baseline — absolute host
+    speed cancels, only relative pallas drift fails."""
+    base = _write_baseline(tmp_path, [
+        _row("kernels", "protocol/round_jnp_8x64k", 100.0),
+        _row("kernels", "protocol/round_pallas_8x64k", 100.0),  # ratio 1.0
+        _row("kernels", "kernel/rfast_commit_ref_1M", 50.0),
+        _row("kernels", "kernel/rfast_commit_pallas_1M", 100.0),  # ratio 2.0
+    ])
+    # a uniformly 3x slower host with identical ratios passes
+    ok = [
+        _row("kernels", "protocol/round_jnp_8x64k", 300.0),
+        _row("kernels", "protocol/round_pallas_8x64k", 300.0),
+        _row("kernels", "kernel/rfast_commit_ref_1M", 150.0),
+        _row("kernels", "kernel/rfast_commit_pallas_1M", 300.0),
+    ]
+    assert bench_run._perf_gate(ok, base, 0.25) == []
+    # pallas drifting from 1.0x to 1.5x its counterpart fails, even on
+    # the faster host; the 2.0x->2.1x row stays inside the threshold
+    bad = [
+        _row("kernels", "protocol/round_jnp_8x64k", 50.0),
+        _row("kernels", "protocol/round_pallas_8x64k", 75.0),
+        _row("kernels", "kernel/rfast_commit_ref_1M", 50.0),
+        _row("kernels", "kernel/rfast_commit_pallas_1M", 105.0),
+    ]
+    assert bench_run._perf_gate(bad, base, 0.25) == \
+        ["protocol/round_pallas_8x64k"]
+
+
+def test_perf_gate_skips_uncovered_rows(tmp_path):
+    """Rows without a counterpart or without a baseline ratio are
+    reported but never gated."""
+    base = _write_baseline(tmp_path, [
+        _row("kernels", "protocol/round_jnp_8x64k", 100.0),
+    ])
+    records = [
+        # no jnp/ref counterpart in this run
+        _row("kernels", "kernel/only_pallas_1M", 500.0),
+        # counterpart exists but the baseline has no such pair
+        _row("kernels", "protocol/round_jnp_8x1M", 100.0),
+        _row("kernels", "protocol/round_pallas_8x1M", 900.0),
+        # correctness-only rows (nan us) never participate
+        _row("kernels", "protocol/round_jnp_vs_pallas_8x64k", None,
+             "maxerr=0.0e+00"),
+    ]
+    assert bench_run._perf_gate(records, base, 0.25) == []

@@ -6,7 +6,10 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.rfast_update.ops import rfast_update
+from repro.kernels.rfast_update import dispatch
+from repro.kernels.rfast_update.grid import block_pad_width, commit_grid
+from repro.kernels.rfast_update.ops import rfast_commit, rfast_update
+from repro.kernels.rfast_update.ref import rfast_commit_ref
 from repro.kernels.ssm_scan.ops import selective_scan
 
 RNG = np.random.default_rng(0)
@@ -31,7 +34,9 @@ def test_rfast_update_sweep(P, dtype):
         rho_out=_arr((Ko, P), dtype), a_out=jnp.asarray([0.3, 0.2]),
         gamma=0.01, w_self=0.5, a_self=0.5)
     ref = rfast_update(**kw, impl="ref")
-    pal = rfast_update(**kw, impl="pallas")
+    # interpret=True pins the kernel-oracle path (the None default would
+    # resolve to the jnp emulation off-TPU, making the check vacuous)
+    pal = rfast_update(**kw, impl="pallas", interpret=True)
     tol = 1e-5 if dtype == jnp.float32 else 3e-2
     for r, p in zip(ref, pal):
         np.testing.assert_allclose(np.asarray(r, np.float32),
@@ -54,10 +59,135 @@ def test_rfast_update_property(P, Kw, Ka, Ko, seed):
               a_out=jnp.asarray(r.uniform(0, .5, Ko), jnp.float32),
               gamma=float(r.uniform(0, .1)), w_self=0.5, a_self=0.5)
     ref = rfast_update(**kw, impl="ref")
-    pal = rfast_update(**kw, impl="pallas")
+    pal = rfast_update(**kw, impl="pallas", interpret=True)
     for x, y in zip(ref, pal):
         np.testing.assert_allclose(np.asarray(x), np.asarray(y),
                                    rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# fleet-grid commit kernel + shape-specialized dispatch
+# ------------------------------------------------------------------ #
+def _grid_case(P, B=5, Ka=3, Ko=2, seed=0, dtype=jnp.float32):
+    """Random flat sources + gather tables, and the per-lane ref answer."""
+    r = np.random.default_rng(seed)
+    a = lambda *s: jnp.asarray(r.normal(0, 1, s), dtype)
+    Nz, Nri, Nr = B * 4, 40, 16
+    src = dict(z_src=a(Nz, P), g_new=a(B, P), go_src=a(Nz, P),
+               ri_src=a(Nri, P), rb_src=a(Nr, P), ro_src=a(Nr, P))
+    idx = dict(
+        idx_z=jnp.asarray(r.integers(0, Nz, B), jnp.int32),
+        idx_g=jnp.asarray(r.integers(0, Nz, B), jnp.int32),
+        idx_ri=jnp.asarray(r.integers(0, Nri, (B, Ka)), jnp.int32),
+        idx_rb=jnp.asarray(r.integers(0, Nr, (B, Ka)), jnp.int32),
+        idx_ro=jnp.asarray(r.integers(0, Nr, (B, Ko)), jnp.int32))
+    par = dict(a_self=a(B), mask=jnp.asarray(r.integers(0, 2, (B, Ka)),
+                                             jnp.float32), a_out=a(B, Ko))
+    refs = []
+    for b in range(B):
+        refs.append(rfast_commit_ref(
+            src["z_src"][idx["idx_z"][b]], src["g_new"][b],
+            src["go_src"][idx["idx_g"][b]],
+            src["ri_src"][np.array(idx["idx_ri"][b])],
+            src["rb_src"][np.array(idx["idx_rb"][b])],
+            par["mask"][b], src["ro_src"][np.array(idx["idx_ro"][b])],
+            par["a_out"][b], a_self=par["a_self"][b]))
+    return dict(**idx, **par, **src), refs
+
+
+@pytest.mark.parametrize("P,modes", [
+    (37, ("emulate",)),                    # ragged: emulate only
+    (1000, ("emulate",)),
+    (32768, ("interpret", "emulate")),     # one block: kernel oracle too
+    (100_001, ("emulate",)),
+])
+def test_commit_grid_matches_ref(P, modes):
+    kw, refs = _grid_case(P)
+    for mode in modes:
+        z_o, ro_o, rb_o = commit_grid(mode=mode, **kw)
+        for b, (zr, ror, rbr) in enumerate(refs):
+            for got, want in ((z_o[b], zr), (ro_o[b], ror), (rb_o[b], rbr)):
+                np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                           rtol=1e-5, atol=1e-5,
+                                           err_msg=f"mode={mode} lane={b}")
+
+
+def test_commit_grid_clamps_sentinel_rows():
+    """Out-of-range (drop-sentinel) indices clamp instead of crashing; a
+    zero mask makes the garbage reads inert in z'."""
+    kw, refs = _grid_case(256)
+    kw["idx_ri"] = jnp.full_like(kw["idx_ri"], 10_000)
+    kw["mask"] = jnp.zeros_like(kw["mask"])
+    z_o, _, _ = commit_grid(mode="emulate", **kw)
+    # with mask=0 the recv term vanishes: z' = a_self*(z + gn - go)
+    want = kw["a_self"][:, None] * (
+        kw["z_src"][kw["idx_z"]] + kw["g_new"] - kw["go_src"][kw["idx_g"]])
+    np.testing.assert_allclose(np.asarray(z_o), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_commit_grid_ragged_blocks_raise_in_kernel_modes():
+    kw, _ = _grid_case(1000)
+    with pytest.raises(ValueError, match="block_pad_width"):
+        commit_grid(mode="interpret", **kw)
+    assert block_pad_width(1000) == 32768
+    assert block_pad_width(32768) == 32768
+    assert block_pad_width(32769) == 2 * 32768
+
+
+def test_commit_grid_rejects_unknown_mode():
+    kw, _ = _grid_case(128)
+    with pytest.raises(ValueError, match="mode"):
+        commit_grid(mode="fast", **kw)
+
+
+def test_dispatch_cache_counters_and_clear():
+    dispatch.clear()
+    assert dispatch.stats() == {"hits": 0, "misses": 0, "entries": 0}
+    kw, _ = _grid_case(512)
+    commit_grid(mode="emulate", **kw)
+    s = dispatch.stats()
+    assert s["misses"] == 1 and s["hits"] == 0 and s["entries"] == 1
+    # identical signature -> cache hit, no new entry
+    commit_grid(mode="emulate", **kw)
+    s = dispatch.stats()
+    assert s["misses"] == 1 and s["hits"] == 1 and s["entries"] == 1
+    # different shape signature -> a second entry
+    kw2, _ = _grid_case(640)
+    commit_grid(mode="emulate", **kw2)
+    s = dispatch.stats()
+    assert s["misses"] == 2 and s["entries"] == 2
+    dispatch.clear()
+    assert dispatch.stats() == {"hits": 0, "misses": 0, "entries": 0}
+
+
+def test_dispatch_resolve_mode():
+    assert dispatch.resolve_mode(True) == "interpret"
+    assert dispatch.resolve_mode(False) == "compiled"
+    on_tpu = jax.default_backend() == "tpu"
+    assert dispatch.resolve_mode(None) == ("compiled" if on_tpu
+                                           else "emulate")
+
+
+@pytest.mark.parametrize("P", [37, 1000, 100_001])
+def test_rfast_commit_pallas_default_routes_grid(P):
+    """rfast_commit(impl='pallas') with the autodetected mode matches the
+    ref on ragged widths (the B=1 grid path, no block padding on CPU)."""
+    r = np.random.default_rng(3)
+    a = lambda *s: jnp.asarray(r.normal(0, 1, s), jnp.float32)
+    Ka, Ko = 3, 2
+    kw = dict(z=a(P), g_new=a(P), g_old=a(P), rho_in=a(Ka, P),
+              rho_buf=a(Ka, P),
+              mask=jnp.asarray([1.0, 0.0, 1.0]), rho_out=a(Ko, P),
+              a_out=jnp.asarray([0.3, 0.2]), a_self=0.5)
+    ref = rfast_commit(**kw, impl="ref")
+    pal = rfast_commit(**kw, impl="pallas")
+    orc = rfast_commit(**kw, impl="pallas", interpret=True)
+    for want, got, got2 in zip(ref, pal, orc):
+        np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(want), np.asarray(got2),
+                                   rtol=1e-5, atol=1e-5)
 
 
 # ------------------------------------------------------------------ #

@@ -40,12 +40,15 @@ def _trees_close(a, b, *, rtol=0.0, atol=1e-7, msg=""):
 # ------------------------------------------------------------------ #
 # padding inertness
 # ------------------------------------------------------------------ #
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
 @pytest.mark.parametrize("seed,loss", [(0, 0.0), (7, 0.2)])
-def test_padded_waves_and_lanes_commit_zero_delta(seed, loss):
+def test_padded_waves_and_lanes_commit_zero_delta(seed, loss, impl):
     """pad_plan'ed waves/lanes/ρ-rows are no-op commits: running the
     padded plan from the same packed state yields the same final state
     (real-lane arithmetic is untouched — per-lane ops never reduce
-    across lanes, and every padded commit scatters to a drop sentinel)."""
+    across lanes, and every padded commit scatters to a drop sentinel).
+    ``impl='pallas'`` pins the same inertness through the fleet-grid
+    commit path (sentinel lanes clamp their gather rows in-kernel)."""
     n, p, K = 7, 5, 300
     topo = binary_tree(n)
     gfn, _ = quad_grad_fn(n, p, noise=0.1)
@@ -60,7 +63,7 @@ def test_padded_waves_and_lanes_commit_zero_delta(seed, loss):
     step_keys = jax.random.split(key, K)
     state0 = init_state(plan, jnp.zeros((n, p), jnp.float32), gfn,
                         init_key, H)
-    runner = rfast_wavefront_scan(plan, gfn, 0.02, donate=False)
+    runner = rfast_wavefront_scan(plan, gfn, 0.02, donate=False, impl=impl)
 
     base = runner(pack_state(state0), wave_inputs(wf, step_keys))
 
@@ -212,8 +215,8 @@ def test_run_sweep_randomized_matrix():
 
 
 def test_run_sweep_pallas_matches_jnp():
-    """impl='pallas' (fleet-vmapped fused commit kernel) realizes the
-    same trajectories."""
+    """impl='pallas' (one fleet-grid commit launch per wave) realizes
+    the same trajectories."""
     n, p, K = 5, 6, 120
     gfn, _ = quad_grad_fn(n, p, noise=0.1)
     topos = [binary_tree(n), directed_ring(n)]
@@ -228,6 +231,96 @@ def test_run_sweep_pallas_matches_jnp():
             np.testing.assert_allclose(
                 np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
                 rtol=2e-5, atol=2e-5, err_msg=f)
+
+
+@pytest.mark.slow
+def test_run_sweep_pallas_randomized_matrix():
+    """The tentpole acceptance matrix through the grid path: a
+    randomized (topology × scenario × seed) fleet where every
+    ``run_sweep(impl='pallas')`` lane must match its individual
+    ``run_rfast`` trajectory."""
+    n, p, K = 7, 6, 600
+    gfn, _ = quad_grad_fn(n, p, noise=0.1)
+    crash = NetworkScenario(
+        latency=0.3, failures=((n - 1, 15.0, 40.0), (2, 55.0, 70.0)),
+        name="crash_recovery")
+    lanes = [
+        (get_scenario("uniform", n), binary_tree(n), 2),
+        (get_scenario("straggler", n), directed_ring(n), 13),
+        (get_scenario("packet_loss", n), exponential(n), 6),
+        (crash, undirected_ring(n), 9),
+    ]
+    scheds = [sc.realize(t, K, seed=s).schedule for sc, t, s in lanes]
+    x0 = jnp.zeros((n, p), jnp.float32)
+    states, _ = run_sweep([t for _, t, _ in lanes], scheds, gfn, x0, 0.02,
+                          seeds=[s for _, _, s in lanes], eval_every=150,
+                          impl="pallas")
+    for i, (sc, topo, seed) in enumerate(lanes):
+        _lane_matches(states[i], scheds[i], topo, gfn, seed, 150)
+
+
+def test_run_sweep_pallas_single_dispatch_signature():
+    """The dispatch contract: one fleet sweep resolves to ONE grid-launch
+    signature (heterogeneous lanes are padded to shared maxima), and a
+    re-run over the same schedules with different RNG seeds re-traces
+    onto the cached entry — zero new misses."""
+    from repro.kernels.rfast_update import dispatch
+
+    n, p, K = 5, 6, 120
+    gfn, _ = quad_grad_fn(n, p, noise=0.1)
+    topos = [binary_tree(n), directed_ring(n), exponential(n)]
+    scheds = [get_scenario("uniform", n).realize(t, K, seed=s).schedule
+              for s, t in enumerate(topos)]
+    x0 = jnp.zeros((n, p), jnp.float32)
+
+    dispatch.clear()
+    run_sweep(topos, scheds, gfn, x0, 0.02, seeds=[0, 1, 2], impl="pallas")
+    s1 = dispatch.stats()
+    # one signature for the whole heterogeneous fleet: every chunk of
+    # every lane rides the same padded wave shape
+    assert s1["entries"] == 1, s1
+    assert s1["misses"] == 1, s1
+
+    # same schedules, new seeds: new trace, same cached launch
+    run_sweep(topos, scheds, gfn, x0, 0.02, seeds=[7, 8, 9], impl="pallas")
+    s2 = dispatch.stats()
+    assert s2["misses"] == s1["misses"], (s1, s2)
+    assert s2["hits"] > s1["hits"], (s1, s2)
+    dispatch.clear()
+
+
+def test_wavefront_pallas_block_padded_p_is_inert():
+    """The compiled-mode contract on CPU: zero-padding the flat
+    parameter axis to a block multiple (pack_state(p_pad=...) +
+    p_real=p threading) realizes the exact unpadded trajectory, and the
+    pad tail stays identically zero."""
+    from repro.kernels.rfast_update.grid import block_pad_width
+
+    n, p, K = 5, 7, 150
+    topo = binary_tree(n)
+    gfn, _ = quad_grad_fn(n, p, noise=0.1)
+    sched = get_scenario("uniform", n).realize(topo, K, seed=1).schedule
+    plan = build_comm_plan(topo)
+    H = int(sched.D) + 2
+    wf = build_wavefront_plan(sched, plan, H)
+    key = jax.random.PRNGKey(1)
+    key, init_key = jax.random.split(key)
+    step_keys = jax.random.split(key, K)
+    state0 = init_state(plan, jnp.zeros((n, p), jnp.float32), gfn,
+                        init_key, H)
+    waves = wave_inputs(wf, step_keys)
+
+    base = rfast_wavefront_scan(plan, gfn, 0.02, donate=False,
+                                impl="pallas")(pack_state(state0), waves)
+    # p_real must slice before grad_fn: quad_grad_fn rejects padded x
+    Pp = block_pad_width(p)
+    padded = rfast_wavefront_scan(
+        plan, gfn, 0.02, donate=False, impl="pallas",
+        p_real=p)(pack_state(state0, p_pad=Pp), waves)
+    for name, a, b in zip(base._fields, base, padded):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b[..., :p]),
+                                   rtol=1e-6, atol=1e-6, err_msg=name)
+        assert not np.asarray(b[..., p:]).any(), name
 
 
 def test_run_sweep_validation():
