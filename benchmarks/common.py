@@ -97,6 +97,25 @@ def time_to_loss(metrics: list[dict], target: float) -> float:
     return float("inf")
 
 
+def time_to_sustained_loss(metrics: list[dict], target: float) -> float:
+    """First virtual time from which mean loss STAYS <= target through
+    the end of the run (inf if the last eval is still above).
+
+    The dynamic-membership rows need this instead of the first-crossing
+    metric: a crash/departure mid-run makes the trajectory non-monotone
+    (a pre-crash dip can touch the target, then the disruption pushes
+    the loss back up), and a frozen-plan run must not get credit for a
+    transient it cannot hold."""
+    t = float("inf")
+    for m in metrics:
+        if m["loss"] <= target:
+            if not np.isfinite(t):
+                t = m["t"]
+        else:
+            t = float("inf")
+    return t
+
+
 def eval_fn_for(prob):
     """Uniform eval hook: every algorithm hands over its *iterate* —
     an (n, p) per-node stack, a (p,) single model, or the R-FAST state."""

@@ -96,6 +96,7 @@ def main() -> None:
                                              quick=args.quick),
         "showdown": lambda: bench_showdown.run(
             rounds=150 if args.quick else 1000)
+        + bench_showdown.run_dynamic(rounds=150 if args.quick else 400)
         + bench_showdown.run_lm(rounds=40 if args.quick else 120),
         "sweep": lambda: bench_sweep.run(
             K=1200 if args.quick else 3000),
@@ -191,6 +192,16 @@ def _perf_gate(records: list[dict], baseline_path: str,
     return problems
 
 
+# Row-name prefixes every showdown run must produce: the dynamic-graph
+# robustness families (epochized root failover incl. the frozen-stall
+# control row, and churn/regional failures).  The structural gate
+# requires them even against baselines that predate the rows, so a
+# future PR cannot silently drop the failover scenarios.
+REQUIRED_PREFIXES = {
+    "showdown": ("showdown/root_failover/", "churn/"),
+}
+
+
 def _compare(records: list[dict], baseline_path: str,
              threshold: float, run_meta: dict | None = None,
              structural: bool = False) -> list[dict]:
@@ -249,6 +260,19 @@ def _compare(records: list[dict], baseline_path: str,
     if structural:
         print("# (structural mode: timing regressions reported, "
               "not gated)", file=sys.stderr)
+        for suite, prefixes in REQUIRED_PREFIXES.items():
+            if suite not in executed:
+                continue
+            for pre in prefixes:
+                ok = any(s == suite and n.startswith(pre)
+                         and not str(r.get("derived", "")
+                                     ).startswith("ERROR:")
+                         for (s, n), r in fresh.items())
+                if not ok:
+                    print(f"# {suite}: REQUIRED row prefix {pre!r} "
+                          f"produced no healthy rows", file=sys.stderr)
+                    problems.append({"suite": suite, "name": pre,
+                                     "problem": "required-missing"})
     if not comparable:
         print("# (regression/missing gates off: run quick/impl settings "
               "differ from the baseline's)", file=sys.stderr)

@@ -1,10 +1,14 @@
-"""Fig. 4a reproduction: R-FAST over five topologies, loss-vs-epoch table.
+"""Fig. 4a reproduction: R-FAST over five topologies, loss-vs-epoch table,
+plus a dynamic-graph coda: the sole common root of ``robust_tree``
+departs mid-run and the epochized engine re-elects a new root on the
+surviving subgraph (DESIGN.md §11).
 
     PYTHONPATH=src python examples/topology_zoo.py
 """
 import jax.numpy as jnp
 
-from repro.core import generate_schedule, get_topology, run_rfast
+from repro.core import (generate_schedule, get_scenario, get_topology,
+                        run_epochs, run_rfast)
 from repro.data import make_logistic_problem
 
 n, K = 7, 10_000
@@ -22,3 +26,22 @@ for name in ("binary_tree", "line", "directed_ring", "exponential",
     print(f"{name:>16} | {str(topo.roots()):>12} | "
           f"{float(prob.mean_loss(x_bar)):10.4f} | "
           f"{float(prob.accuracy(x_bar)):.3f}")
+
+# ------------------------------------------------------------------ #
+# mid-run root re-election: node 0 (the ONLY common root of the tree)
+# leaves permanently; the trace splits into topology epochs and the
+# engine migrates state onto a rebuilt plan rooted at a survivor.
+# ------------------------------------------------------------------ #
+print("\nroot failover on robust_tree (sole common root departs):")
+topo = get_topology("robust_tree", n)
+trace = get_scenario("root_failover", n).realize_epochs(topo, K, seed=0)
+for i, ep in enumerate(trace.epochs):
+    act = int(ep.topology.active_mask().sum())
+    print(f"  epoch {i}: t0={ep.t0:6.1f}  events {ep.k0}..{ep.k0 + ep.K}"
+          f"  root={ep.root}  active={act}/{n}  graph={ep.topology.name}")
+state, _ = run_epochs(trace, prob.grad_fn(), jnp.zeros((n, prob.p)),
+                      gamma=5e-3, seed=0)
+alive = trace.epochs[-1].topology.active_mask()
+x_bar = jnp.asarray(state.x)[alive].mean(0)
+print(f"  survivors' final loss {float(prob.mean_loss(x_bar)):.4f} | "
+      f"acc {float(prob.accuracy(x_bar)):.3f}")

@@ -7,8 +7,10 @@ edge-plan extraction) -> :mod:`protocol` (the single S.1–S.5 update, with
 ``runtime``, ``runtime_sharded``)."""
 from .topology import (  # noqa: F401
     Topology, get_topology, binary_tree, line, directed_ring,
-    undirected_ring, exponential, mesh2d, parameter_server, TOPOLOGIES,
-    validate_weights, spanning_tree_roots, common_roots,
+    undirected_ring, exponential, mesh2d, parameter_server, robust_tree,
+    TOPOLOGIES, validate_weights, spanning_tree_roots,
+    spanning_tree_roots_dense, common_roots, subgraph_topology,
+    bfs_tree_topology, epoch_topology,
 )
 from .plan import (  # noqa: F401
     CommPlan, build_comm_plan, pad_comm_plan, matchings,
@@ -27,10 +29,12 @@ from .schedule import (  # noqa: F401
     generate_schedule, round_robin_schedule,
 )
 from .scenario import (  # noqa: F401
-    NetworkScenario, ScenarioTrace, GilbertElliott, EdgeChannels,
-    SCENARIOS, get_scenario, realize_batch,
+    NetworkScenario, ScenarioTrace, Epoch, EpochTrace, GilbertElliott,
+    EdgeChannels, SCENARIOS, get_scenario, realize_batch,
+    realize_epochs_batch,
 )
 from .simulator import (  # noqa: F401
-    RFASTState, init_state, rfast_scan, run_rfast, run_sweep, tracked_mass,
+    RFASTState, init_state, rfast_scan, run_rfast, run_sweep,
+    migrate_state, run_epochs, run_sweep_epochs, tracked_mass,
 )
 from . import baselines  # noqa: F401

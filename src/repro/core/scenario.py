@@ -37,11 +37,12 @@ from typing import Callable, Mapping, Sequence
 import numpy as np
 
 from .schedule import Schedule, _realized_T
-from .topology import Topology
+from .topology import Topology, epoch_topology
 
 __all__ = [
     "GilbertElliott", "EdgeChannels", "NetworkScenario", "ScenarioTrace",
-    "SCENARIOS", "get_scenario", "realize_batch",
+    "Epoch", "EpochTrace",
+    "SCENARIOS", "get_scenario", "realize_batch", "realize_epochs_batch",
 ]
 
 
@@ -108,6 +109,43 @@ class ScenarioTrace:
 
 
 @dataclasses.dataclass(frozen=True)
+class Epoch:
+    """One membership epoch of a dynamic scenario: a fixed topology (with
+    its ``active`` mask), the trace realized over it, and the membership
+    delta against the previous epoch (what :func:`~repro.core.simulator.
+    migrate_state` must absorb at the transition into this epoch)."""
+
+    topology: Topology
+    trace: ScenarioTrace
+    t0: float             # virtual-time offset of this epoch's clock 0
+    k0: int               # global event offset of this epoch's event 0
+    joined: np.ndarray    # (n,) bool: nodes active now, inactive before
+    departed: np.ndarray  # (n,) bool: nodes inactive now, active before
+    root: int             # the epoch's elected common root (global id)
+
+    @property
+    def K(self) -> int:
+        return int(len(self.trace.schedule.agent))
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochTrace:
+    """A scenario realization partitioned into membership epochs, each
+    with its own validated topology — the input of
+    :func:`~repro.core.simulator.run_epochs`.  Static scenarios yield a
+    single epoch whose trace is bit-identical to :meth:`NetworkScenario.
+    realize`."""
+
+    epochs: tuple[Epoch, ...]
+    n: int
+    K: int
+
+    @property
+    def dynamic(self) -> bool:
+        return len(self.epochs) > 1
+
+
+@dataclasses.dataclass(frozen=True)
 class NetworkScenario:
     """Declarative network/compute model shared by every algorithm.
 
@@ -126,6 +164,21 @@ class NetworkScenario:
       failures: crash/recovery windows ``(node, t0, t1)`` — the node does
         not wake inside the window; bounded downtime keeps Assumption 3
         satisfied with a larger realized T.
+      joins: dynamic membership ``(node, t_join)`` — the node is not a
+        member before ``t_join`` (a ``t_join`` of 0 means member from the
+        start).  Under :meth:`realize_epochs` a join opens a new epoch
+        (the node enters with the root's iterate); under the frozen
+        :meth:`realize` it degrades to a first-wake delay.
+      leaves: dynamic membership ``(node, t_leave)`` — the node departs
+        permanently at ``t_leave``.  Under :meth:`realize_epochs` this
+        opens a new epoch (with root re-election when the departing node
+        was a common root); under the frozen :meth:`realize` it degrades
+        to a crash window that never ends — which is exactly how a
+        frozen plan *fails* when the sole common root leaves.
+      regional_failures: correlated failure groups
+        ``(nodes, t0, t1, prob)`` — ONE Bernoulli(prob) draw per group;
+        when it fires, every node in the group gets the crash window
+        ``[t0, t1)`` together (rack/region outage).
       D_max: hard staleness bound (Assumption 3ii); default ``4n + 16``.
       name: optional label (used by benchmark rows).
     """
@@ -138,8 +191,19 @@ class NetworkScenario:
     gilbert_elliott: GilbertElliott | None = None
     stragglers: tuple[tuple[int, float, float, float], ...] = ()
     failures: tuple[tuple[int, float, float], ...] = ()
+    joins: tuple[tuple[int, float], ...] = ()
+    leaves: tuple[tuple[int, float], ...] = ()
+    regional_failures: tuple[
+        tuple[tuple[int, ...], float, float, float], ...] = ()
     D_max: int | None = None
     name: str = ""
+
+    @property
+    def dynamic(self) -> bool:
+        """True when the scenario can change the member set mid-run —
+        such scenarios should realize through :meth:`realize_epochs`
+        (the frozen :meth:`realize` only *degrades* them)."""
+        return bool(self.joins or self.leaves or self.regional_failures)
 
     # -- per-node / per-edge resolution ------------------------------- #
     def node_compute(self, n: int) -> np.ndarray:
@@ -178,6 +242,167 @@ class NetworkScenario:
         AD-PSGD's partner-read clamp/ring sizing)."""
         return self.D_max if self.D_max is not None else 4 * n + 16
 
+    # -- dynamic membership helpers ----------------------------------- #
+    def _effective_failures(self, rng: np.random.Generator) \
+            -> list[tuple[int, float, float]]:
+        """Crash windows actually in force this realization: the declared
+        ``failures`` plus every *fired* regional group (one Bernoulli
+        draw per group — drawn only when groups exist, so the default
+        RNG stream is untouched and historical schedules stay golden)."""
+        eff = [(int(i), float(t0), float(t1)) for (i, t0, t1)
+               in self.failures]
+        if self.regional_failures:
+            draws = rng.uniform(size=len(self.regional_failures))
+            for (group, t0, t1, p), u in zip(self.regional_failures,
+                                             draws):
+                if u < p:
+                    eff += [(int(i), float(t0), float(t1))
+                            for i in group]
+        return eff
+
+    def _membership_windows(self) -> list[tuple[int, float, float]]:
+        """joins/leaves degraded to frozen-graph crash windows: a leave
+        is a crash that never recovers, a join a crash since forever."""
+        wins = [(int(j), float(t), np.inf) for (j, t) in self.leaves]
+        wins += [(int(j), -np.inf, float(t)) for (j, t) in self.joins
+                 if t > 0.0]
+        return wins
+
+    def _epoch_scenario(self, t0: float,
+                        eff_failures: list[tuple[int, float, float]]) \
+            -> "NetworkScenario":
+        """This scenario re-expressed in one epoch's local clock: windows
+        shifted by ``-t0`` (expired ones dropped), membership fields
+        cleared (the epoch's ``Topology.active`` mask owns membership),
+        regional draws already resolved into ``eff_failures``."""
+        strag = tuple((i, s0 - t0, s1 - t0, f)
+                      for (i, s0, s1, f) in self.stragglers if s1 > t0)
+        fails = tuple((i, f0 - t0, f1 - t0)
+                      for (i, f0, f1) in eff_failures if f1 > t0)
+        return dataclasses.replace(
+            self, stragglers=strag, failures=fails,
+            joins=(), leaves=(), regional_failures=())
+
+    def _epoch_timeline(self, topo: Topology,
+                        eff_failures: list[tuple[int, float, float]],
+                        max_epochs: int = 64) \
+            -> list[tuple[float, float, np.ndarray, Topology]]:
+        """Partition [0, inf) into membership epochs ``(t0, t1, active,
+        topology)``.
+
+        Boundaries come from joins/leaves and from the re-election
+        trigger: a crash window opening on a node that is currently a
+        *common root* converts into a leave-at-``t0`` / rejoin-at-``t1``
+        pair (the fleet rewires around the crashed root instead of
+        stalling on it).  Each epoch's topology is
+        :func:`~repro.core.topology.epoch_topology` of the surviving
+        member set — restriction when Assumption 2 survives, tree
+        rebuild around a re-elected root otherwise; a ``ValueError``
+        propagates when neither is possible.
+        """
+        n = topo.n
+        active = np.ones(n, dtype=bool)
+        pending: list[tuple[float, int, bool]] = []
+        for (j, tj) in self.joins:
+            if tj > 0.0:
+                active[int(j)] = False
+                pending.append((float(tj), int(j), True))
+        for (j, tj) in self.leaves:
+            pending.append((float(tj), int(j), False))
+        handled: set[tuple[int, float, float]] = set()
+        out: list[tuple[float, float, np.ndarray, Topology]] = []
+        t = 0.0
+        prev_root: int | None = None
+        for _ in range(max_epochs):
+            if not active.any():
+                raise ValueError("membership timeline empties the graph")
+            if active.all() and topo.active is None:
+                etopo = topo          # static full-membership epoch
+            else:
+                etopo = epoch_topology(topo, active, prefer=prev_root)
+            roots_now = etopo.common_roots
+            prev_root = int(roots_now[0])
+            tm = min((tt for (tt, _, _) in pending if tt > t),
+                     default=np.inf)
+            tr, win = np.inf, None
+            for w in eff_failures:
+                (fn, t0, t1) = w
+                if (w not in handled and int(fn) in roots_now
+                        and t0 > t and t1 > t0 and t0 < tr):
+                    tr, win = t0, w
+            b = min(tm, tr)
+            if not np.isfinite(b):
+                out.append((t, np.inf, active.copy(), etopo))
+                return out
+            if win is not None and tr <= tm:
+                handled.add(win)
+                (fn, t0, t1) = win
+                pending.append((float(t0), int(fn), False))
+                if np.isfinite(t1):
+                    pending.append((float(t1), int(fn), True))
+            out.append((t, float(b), active.copy(), etopo))
+            still = []
+            for (tt, node, on) in pending:
+                if tt <= b:
+                    active[node] = on
+                else:
+                    still.append((tt, node, on))
+            pending = still
+            t = float(b)
+        raise ValueError(f"membership timeline exceeds {max_epochs} "
+                         f"epochs")
+
+    def realize_epochs(self, topo: Topology, K: int, *, seed: int = 0,
+                       max_epochs: int = 64) -> EpochTrace:
+        """Realize the scenario as an epochized trace: one validated
+        (Topology, ScenarioTrace) per membership epoch, K events total.
+
+        Regional-failure draws happen once up front; the membership
+        timeline then fixes the epochs, the global event budget ``K`` is
+        split across them in proportion to expected wake counts
+        (duration × aggregate active wake rate, every epoch keeping at
+        least one event), and each epoch realizes independently over its
+        own topology in its own local clock (windows shifted, inactive
+        nodes never wake).  Static scenarios return one epoch whose
+        trace is bit-identical to :meth:`realize` — the oracle the
+        epochized engine is pinned against.
+        """
+        rng = np.random.default_rng(seed)
+        eff = self._effective_failures(rng)
+        timeline = self._epoch_timeline(topo, eff, max_epochs=max_epochs)
+        n = topo.n
+        n_ep = len(timeline)
+        if K < n_ep:
+            raise ValueError(f"K={K} cannot cover {n_ep} epochs")
+        base = self.node_compute(n)
+        exp = [max(1.0, (t1 - t0) * float(np.sum(1.0 / base[act])))
+               for (t0, t1, act, _e) in timeline[:-1]]
+        ks = [max(1, int(round(v))) for v in exp]
+        if sum(ks) > K - 1:          # budget overrun: rescale, floor 1
+            scale = (K - n_ep) / max(1, sum(ks))
+            ks = [max(1, int(v * scale)) for v in ks]
+        ks.append(K - sum(ks))
+        epochs: list[Epoch] = []
+        k0 = 0
+        prev_act: np.ndarray | None = None
+        for e, ((t0, _t1, act, etopo), Ke) in enumerate(zip(timeline,
+                                                            ks)):
+            sd = seed if e == 0 else int(
+                np.random.SeedSequence([seed, e]).generate_state(1)[0])
+            trace = self._epoch_scenario(t0, eff).realize(etopo, Ke,
+                                                          seed=sd)
+            joined = (act & ~prev_act if prev_act is not None
+                      else np.zeros(n, dtype=bool))
+            departed = (prev_act & ~act if prev_act is not None
+                        else np.zeros(n, dtype=bool))
+            epochs.append(Epoch(topology=etopo, trace=trace,
+                                t0=float(t0), k0=k0, joined=joined,
+                                departed=departed,
+                                root=int(etopo.common_roots[0])))
+            k0 += Ke
+            prev_act = act
+        return EpochTrace(epochs=tuple(epochs), n=n, K=K)
+
     # ----------------------------------------------------------------- #
     # the asynchronous event clock (the only one in the repo)
     # ----------------------------------------------------------------- #
@@ -196,6 +421,12 @@ class NetworkScenario:
         n = topo.n
         base = self.node_compute(n)
         D_max = self.resolved_D_max(n)
+        # regional draws (none by default — golden RNG order preserved),
+        # then joins/leaves degraded to frozen-graph crash windows: this
+        # path keeps the realize()-time graph, so membership can only
+        # stall nodes, never rewire around them
+        eff_failures = (self._effective_failures(rng)
+                        + self._membership_windows())
 
         edges_w = topo.edges_W()
         edges_a = topo.edges_A()
@@ -221,9 +452,11 @@ class NetworkScenario:
 
         clocks = rng.uniform(0.0, 1.0, n) * base
         # crash windows: push a node's first wake-up past the recovery time
-        for (fn_, t0_, t1_) in self.failures:
+        for (fn_, t0_, t1_) in eff_failures:
             if clocks[fn_] >= t0_:
                 clocks[fn_] = max(clocks[fn_], t1_)
+        # epoch-restricted topologies: inactive members never wake
+        clocks[~topo.active_mask()] = np.inf
         ch_w = self.channels(len(edges_w), rng)
         ch_a = self.channels(len(edges_a), rng)
 
@@ -238,6 +471,10 @@ class NetworkScenario:
         for k in range(K):
             a = int(np.argmin(clocks))
             now = float(clocks[a])
+            if not np.isfinite(now):
+                raise ValueError(
+                    "every node left/crashed forever before realizing "
+                    f"all {K} events (got {k})")
             agent[k] = a
             times[k] = now
 
@@ -289,7 +526,7 @@ class NetworkScenario:
             step = base[a] * self.slow_factor(a, now)
             clocks[a] = now + step * (1.0 + rng.uniform(-self.jitter,
                                                         self.jitter))
-            for (fn_, t0_, t1_) in self.failures:
+            for (fn_, t0_, t1_) in eff_failures:
                 if fn_ == a and t0_ <= clocks[a] < t1_:
                     clocks[a] = t1_       # crash: sleep through the window
 
@@ -323,6 +560,13 @@ class NetworkScenario:
 
         ``topo`` may be an ``int`` node count (e.g. Ring-AllReduce): the
         communication graph is then taken as the n-edge directed ring.
+
+        Dynamic membership stalls-and-rewires the barrier too, so the
+        showdown rows stay fair against the epochized async engines: a
+        round's participants are the members at the round's start; a
+        node leaving mid-round caps its contribution at its leave time;
+        edges with a non-member endpoint are skipped; fired regional
+        groups stall like any other crash window.
         """
         rng = np.random.default_rng(seed)
         if isinstance(topo, int):
@@ -331,6 +575,13 @@ class NetworkScenario:
         else:
             n = topo.n
             edges = sorted(set(topo.edges_W()) | set(topo.edges_A()))
+        eff_failures = self._effective_failures(rng)
+        join_t = {int(j): float(tj) for (j, tj) in self.joins}
+        leave_t = {int(j): float(tj) for (j, tj) in self.leaves}
+
+        def member(i: int, at: float) -> bool:
+            return join_t.get(i, 0.0) <= at < leave_t.get(i, np.inf)
+
         base = self.node_compute(n)
         lat = self.edge_latency_of(edges)
         ch = self.channels(len(edges), rng)
@@ -338,17 +589,32 @@ class NetworkScenario:
         times = np.zeros(rounds, dtype=np.float64)
         t = 0.0
         for r in range(rounds):
+            if not any(member(i, t) for i in range(n)):
+                nxt = min((tj for tj in join_t.values() if tj > t),
+                          default=None)
+                if nxt is None:       # empty forever: clock stops
+                    times[r:] = t
+                    return times
+                t = nxt
             finish = t
             for i in range(n):
+                if not member(i, t):
+                    continue
                 step = base[i] * self.slow_factor(i, t)
                 f_i = t + step * (1.0 + rng.uniform(-self.jitter, self.jitter))
                 # a crash window overlapping the work stalls the barrier
-                for (fn_, t0_, t1_) in self.failures:
+                for (fn_, t0_, t1_) in eff_failures:
                     if fn_ == i and t0_ < f_i and t1_ > t:
                         f_i = max(f_i, t1_)
+                # leaving mid-round cuts the contribution off, not the
+                # barrier: survivors re-form without the departed node
+                if i in leave_t:
+                    f_i = min(f_i, max(t, leave_t[i]))
                 finish = max(finish, f_i)
             comm = 0.0
-            for e in range(len(edges)):
+            for e, (j, i) in enumerate(edges):
+                if not (member(j, t) and member(i, t)):
+                    continue
                 t_e = rng.exponential(lat[e])
                 tries = 1
                 while not ch.ok(e) and tries < max_retries:
@@ -403,6 +669,39 @@ def _crash_recovery(n: int) -> NetworkScenario:
         name="crash_recovery")
 
 
+def _churn(n: int) -> NetworkScenario:
+    """Dynamic membership: a late joiner and a permanent departure give
+    a 3-epoch timeline (without joiner / full / without leaver)."""
+    return NetworkScenario(
+        latency=0.3,
+        joins=((max(1, n - 2), 40.0),),
+        leaves=((n - 1, 90.0),),
+        name="churn")
+
+
+def _regional_failure(n: int) -> NetworkScenario:
+    """Correlated failures: one draw crashes a whole 'rack' together —
+    a certain back-of-fleet outage plus a coin-flip repeat."""
+    rack = tuple(range(max(1, n - max(2, n // 3)), n))
+    return NetworkScenario(
+        latency=0.3,
+        regional_failures=((rack, 60.0, 120.0, 1.0),
+                           (rack, 200.0, 230.0, 0.5)),
+        name="regional_failure")
+
+
+def _root_failover(n: int) -> NetworkScenario:
+    """The Assumption-2 stress test: node 0 — the SOLE common root of
+    the tree topologies — departs permanently mid-run.  Epochized runs
+    re-elect a surviving root and keep converging (pair with
+    ``robust_tree``, whose sibling rungs keep the skeleton connected);
+    frozen-plan runs stall on the dead root.  The departure lands early
+    (t=30, mid-descent at benchmark scale) so the post-crash regime
+    dominates the trace and the stall is unambiguous."""
+    return NetworkScenario(latency=0.3, leaves=((0, 30.0),),
+                           name="root_failover")
+
+
 SCENARIOS: dict[str, Callable[[int], NetworkScenario]] = {
     "uniform": _uniform,
     "straggler": _straggler,
@@ -410,6 +709,9 @@ SCENARIOS: dict[str, Callable[[int], NetworkScenario]] = {
     "packet_loss": _packet_loss,
     "bursty_loss": _bursty_loss,
     "crash_recovery": _crash_recovery,
+    "churn": _churn,
+    "regional_failure": _regional_failure,
+    "root_failover": _root_failover,
 }
 
 
@@ -446,4 +748,25 @@ def realize_batch(
     resolved = [get_scenario(sc, topo.n) if isinstance(sc, str) else sc
                 for sc in scenarios]
     return [sc.realize(topo, K, seed=int(seed))
+            for sc in resolved for seed in seeds]
+
+
+def realize_epochs_batch(
+    topo: Topology, K: int, *,
+    scenario: NetworkScenario | str | None = None,
+    scenarios: Sequence[NetworkScenario | str] | None = None,
+    seeds: Sequence[int] = (0,),
+) -> list[EpochTrace]:
+    """:func:`realize_batch` for epochized traces: one
+    :class:`EpochTrace` per (scenario, seed) lane, scenario-major —
+    the input of :func:`repro.core.simulator.run_sweep_epochs`.  Note
+    the epoch *timelines* of a fleet may differ per lane (regional
+    draws are per-seed)."""
+    if (scenario is None) == (scenarios is None):
+        raise ValueError("pass exactly one of scenario= or scenarios=")
+    if scenario is not None:
+        scenarios = [scenario]
+    resolved = [get_scenario(sc, topo.n) if isinstance(sc, str) else sc
+                for sc in scenarios]
+    return [sc.realize_epochs(topo, K, seed=int(seed))
             for sc in resolved for seed in seeds]

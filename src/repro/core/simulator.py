@@ -72,7 +72,8 @@ from .topology import Topology
 __all__ = ["RFASTState", "PackedState", "init_state", "zeros_state",
            "pack_state", "unpack_state", "wave_inputs", "rfast_scan",
            "rfast_wavefront_scan", "rfast_sweep_scan", "run_rfast",
-           "run_sweep", "tracked_mass"]
+           "run_sweep", "migrate_state", "run_epochs", "run_sweep_epochs",
+           "tracked_mass"]
 
 GradFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 # grad_fn(node_id, x_node, rng_key) -> gradient, all traced.
@@ -910,4 +911,305 @@ def run_sweep(
                 metrics[s].append(m)
     states = [_lane_state(packed, s, K, e_a_lane=e_a_lane[s], **lane_kw)
               for s in range(S)]
+    return states, metrics
+
+
+# --------------------------------------------------------------------- #
+# epochized runs: dynamic membership / time-varying topologies
+# --------------------------------------------------------------------- #
+def migrate_state(state: RFASTState, prev_topo, epoch, *,
+                  H: int) -> RFASTState:
+    """Carry an :class:`RFASTState` across a membership-epoch boundary.
+
+    The migration preserves the Lemma-3 invariant exactly, by
+    construction (DESIGN.md §11):
+
+    1. **Settle in-flight mass.**  Every A-edge's undelivered running-sum
+       difference ρ_e − ρ̃_e is added to its receiver's z (an instant
+       final delivery), then ρ/ρ̃ and both history rings reset to zero —
+       the new epoch's edge set need not match the old one, and a reset
+       ring read (slot 0) now correctly means "nothing pushed yet".
+    2. **Re-absorb departures.**  A departed node's tracked surplus
+       ``z_d − g_prev_d`` moves to the new epoch's root and its z/g_prev
+       zero out, so the surviving sum Σz − Σg_prev stays 0: tracking
+       remains *conservative* — the fleet average still estimates the
+       average gradient of the surviving members.
+    3. **Adopt joiners.**  A joining node copies the donor's current
+       iterate into x and v (the donor is the new root, or the first
+       carried-over member when the root itself is the one joining) with
+       ``z = g_prev = 0`` — a zero net contribution until its first own
+       activation samples a real gradient.
+    4. **v continuity.**  The new epoch's ``v_hist[0]`` is seeded with
+       the carried v: slot 0 is the engines' "no write yet" read, so
+       neighbours pulling a node that has not yet re-activated read its
+       last published value instead of zero (no re-init transient).
+
+    ``prev_topo`` identifies the A-edge layout the state's ρ rows belong
+    to (fleet-padded tails are inert zeros).  The returned state has the
+    NEW epoch's ρ layout and ``H``-deep rings, ``k = 0`` (epoch-local;
+    callers track the global event count).
+    """
+    prev_plan = as_comm_plan(prev_topo)
+    new_plan = as_comm_plan(epoch.topology)
+    n, p = state.x.shape
+    e_prev = max(1, prev_plan.n_edges_a)
+
+    # (1) settle ρ − ρ̃ at each receiver
+    z = state.z
+    if prev_plan.n_edges_a:
+        inflight = state.rho[:e_prev] - state.rho_buf[:e_prev]
+        z = z.at[jnp.asarray(prev_plan.dst_a[:e_prev])].add(inflight)
+
+    # (2) departures: move the tracked surplus to the new root
+    dep = jnp.asarray(epoch.departed)
+    root = int(epoch.root)
+    d_mass = jnp.sum(jnp.where(dep[:, None], z - state.g_prev, 0.0),
+                     axis=0)
+    z = jnp.where(dep[:, None], 0.0, z).at[root].add(d_mass)
+    g_prev = jnp.where(dep[:, None], 0.0, state.g_prev)
+
+    # (3) joiners adopt a surviving donor's iterate, zero tracking
+    joined_np = np.asarray(epoch.joined)
+    if joined_np.any():
+        carried = epoch.topology.active_mask() & ~joined_np
+        if not carried.any():
+            raise ValueError("epoch has no carried-over member to "
+                             "donate an iterate to its joiners")
+        donor = root if not joined_np[root] else int(
+            np.nonzero(carried)[0][0])
+        joined = jnp.asarray(joined_np)
+        x = jnp.where(joined[:, None], state.x[donor], state.x)
+        v = jnp.where(joined[:, None], state.x[donor], state.v)
+        z = jnp.where(joined[:, None], 0.0, z)
+        g_prev = jnp.where(joined[:, None], 0.0, g_prev)
+    else:
+        x, v = state.x, state.v
+
+    # (4) fresh rings in the new epoch's layout; slot 0 carries v
+    e_a = max(1, new_plan.n_edges_a)
+    zf = lambda *s: jnp.zeros(s, jnp.float32)
+    return RFASTState(
+        k=jnp.zeros((), jnp.int32), x=x, v=v, z=z, g_prev=g_prev,
+        rho=zf(e_a, p), rho_buf=zf(e_a, p),
+        v_hist=zf(H, n, p).at[0].set(v), rho_hist=zf(H, e_a, p))
+
+
+def _epoch_lane_plans(epochs, eval_every: int, *, H: int, kw: int,
+                      ka: int, ko: int, e_a: int):
+    """Per-epoch padded CommPlans, WavefrontPlans (built against the
+    shared shape maxima) and chunk wave bounds for one epochized lane."""
+    plans = [as_comm_plan(ep.topology) for ep in epochs]
+    padded = [pad_comm_plan(pl, kw=kw, ka=ka, ko=ko) for pl in plans]
+    wfs = [build_wavefront_plan(ep.trace.schedule, padded[i], H,
+                                break_every=eval_every, e_a=e_a)
+           for i, ep in enumerate(epochs)]
+    bounds = []
+    for ep, wf in zip(epochs, wfs):
+        starts = list(range(0, ep.K, eval_every))
+        bounds.append([int(np.searchsorted(wf.event_start, s))
+                       for s in starts] + [wf.n_waves])
+    return plans, padded, wfs, bounds
+
+
+def _scan_epochs(epochs, plans, wfs, bounds, runner, step_keys, state0,
+                 *, B: int, cmax: int, e_a: int, H: int, p: int,
+                 p_pad: int, eval_every: int, eval_fn, chunk_cb):
+    """Drive one epochized lane through the shared jitted runner: scan
+    each epoch's chunks (padded to the shared ``(cmax, B)`` wave shape),
+    migrating the packed state at every epoch boundary."""
+    metrics: list[dict] = []
+    packed = pack_state(state0, e_a=e_a,
+                        p_pad=(p_pad if p_pad != p else None))
+    for i, (ep, wf, b) in enumerate(zip(epochs, wfs, bounds)):
+        if i > 0:
+            state = unpack_state(packed, ep.k0, p=p)
+            state = migrate_state(state, epochs[i - 1].topology, ep, H=H)
+            packed = pack_state(state, e_a=e_a,
+                                p_pad=(p_pad if p_pad != p else None))
+        rc = concat_plans(
+            [pad_plan(slice_plan(wf, b[c], b[c + 1]),
+                      width=B, n_waves=cmax, e_a=e_a)
+             for c in range(len(b) - 1)])
+        waves = wave_inputs(rc, step_keys[ep.k0:ep.k0 + ep.K])
+        sched = ep.trace.schedule
+        for ci in range(len(b) - 1):
+            w = jax.tree.map(lambda a: a[ci * cmax:(ci + 1) * cmax],
+                             waves)
+            packed = runner(packed, w)
+            e_loc = min(ep.K, (ci + 1) * eval_every)
+            kg = ep.k0 + e_loc
+            if eval_fn is not None:
+                m = eval_fn(unpack_state(packed, kg, p=p),
+                            ep.t0 + float(sched.times[e_loc - 1]))
+                m["k"] = kg
+                metrics.append(m)
+            if chunk_cb is not None:
+                chunk_cb(unpack_state(packed, kg, p=p), kg)
+    K = epochs[-1].k0 + epochs[-1].K
+    final = unpack_state(packed, K, p=p)
+    # strip the fleet ρ padding back to the final epoch's real layout
+    e_fin = max(1, plans[-1].n_edges_a)
+    if e_fin != e_a:
+        final = final._replace(rho=final.rho[:e_fin],
+                               rho_buf=final.rho_buf[:e_fin],
+                               rho_hist=final.rho_hist[:, :e_fin])
+    return final, metrics
+
+
+def run_epochs(
+    epoch_trace,
+    grad_fn: Objective,
+    x0: jnp.ndarray,
+    gamma: float,
+    *,
+    seed: int = 0,
+    eval_every: int = 0,
+    eval_fn: Callable[[RFASTState, float], dict] | None = None,
+    impl: str = "jnp",
+    interpret: bool | None = None,
+    chunk_cb: Callable[[RFASTState, int], None] | None = None,
+) -> tuple[RFASTState, list[dict]]:
+    """Run an epochized trace (:meth:`NetworkScenario.realize_epochs`)
+    through the wavefront engine: one compiled scan body for ALL epochs.
+
+    Every epoch's CommPlan is degree-normalized (``pad_comm_plan``) and
+    its WavefrontPlan padded (``pad_plan``) to the trace-wide maxima —
+    history depth H, in/out degrees, ρ layout ``e_a``, wave width B and
+    chunk wave count — so epoch transitions change *data*, never
+    compiled shapes: the jitted runner compiles once and (under
+    ``impl="pallas"``) the ``commit_grid`` dispatch cache stays at one
+    entry per shape across the whole run.  At each boundary the packed
+    state is migrated by :func:`migrate_state` (mass settled, departures
+    re-absorbed at the new root, joiners adopted, v carried through ring
+    slot 0).
+
+    RNG: one global per-event key stream derived exactly as
+    :func:`run_rfast` does (``PRNGKey(seed)``), sliced per epoch at
+    ``k0`` — a single-epoch (static) trace therefore reproduces
+    :func:`run_rfast` on the same realized schedule.  ``eval_every``
+    counts *global* events; evaluation additionally lands on every epoch
+    boundary (partial final chunks), each metrics entry stamped with the
+    global event count ``k`` and global virtual time ``t0 + t_local``.
+    """
+    epochs = list(epoch_trace.epochs)
+    if not epochs:
+        raise ValueError("epoch trace has no epochs")
+    grad_fn = as_grad_fn(grad_fn)
+    K = int(epoch_trace.K)
+    if eval_every <= 0:
+        eval_every = K
+
+    H = max(int(ep.trace.schedule.D) for ep in epochs) + 2
+    raw_plans = [as_comm_plan(ep.topology) for ep in epochs]
+    kw = max(pl.kw for pl in raw_plans)
+    ka = max(pl.ka for pl in raw_plans)
+    ko = max(pl.ko for pl in raw_plans)
+    e_a = max(max(1, pl.n_edges_a) for pl in raw_plans)
+    plans, padded, wfs, bounds = _epoch_lane_plans(
+        epochs, eval_every, H=H, kw=kw, ka=ka, ko=ko, e_a=e_a)
+    B = max(wf.width for wf in wfs)
+    cmax = max(b[c + 1] - b[c] for b in bounds for c in range(len(b) - 1))
+
+    key, init_key = jax.random.split(jax.random.PRNGKey(seed))
+    step_keys = jax.random.split(key, K)
+    state0 = init_state(plans[0], x0, grad_fn, init_key, H)
+    p = int(state0.x.shape[-1])
+    p_pad = p
+    if impl == "pallas" and dispatch.resolve_mode(interpret) == "compiled":
+        p_pad = block_pad_width(p)
+    runner = rfast_wavefront_scan(
+        padded[0], grad_fn, gamma, donate=True, impl=impl,
+        interpret=interpret, p_real=(p if p_pad != p else None))
+    return _scan_epochs(epochs, plans, wfs, bounds, runner, step_keys,
+                        state0, B=B, cmax=cmax, e_a=e_a, H=H, p=p,
+                        p_pad=p_pad, eval_every=eval_every,
+                        eval_fn=eval_fn, chunk_cb=chunk_cb)
+
+
+def run_sweep_epochs(
+    epoch_traces,
+    grad_fn: Objective,
+    x0: jnp.ndarray,
+    gamma: float,
+    *,
+    seeds=None,
+    eval_every: int = 0,
+    eval_fn: Callable[[RFASTState, float], dict] | None = None,
+    impl: str = "jnp",
+    interpret: bool | None = None,
+) -> tuple[list[RFASTState], list[list[dict]]]:
+    """Fleet of epochized lanes (e.g. one scenario × many seeds from
+    :func:`repro.core.scenario.realize_epochs_batch`) through ONE shared
+    compiled scan body.
+
+    Unlike :func:`run_sweep`, lanes are not flattened into a single wave
+    program: membership timelines are lane-local (regional-failure draws
+    and epoch cuts differ per seed), so lanes execute sequentially — but
+    every epoch of every lane is padded to the fleet-wide shape maxima,
+    so one jitted runner serves all lanes and all epochs (one compile,
+    one ``commit_grid`` dispatch-cache entry per shape).  Per lane the
+    result equals :func:`run_epochs` of that (trace, seed) — same key
+    streams, same migrations.
+    """
+    traces = list(epoch_traces)
+    S = len(traces)
+    if S == 0:
+        raise ValueError("run_sweep_epochs needs at least one lane")
+    if seeds is None:
+        seeds = [0] * S
+    seeds = [int(s) for s in seeds]
+    if len(seeds) != S:
+        raise ValueError(f"{len(seeds)} seeds for {S} lanes")
+    n = traces[0].n
+    if any(t.n != n for t in traces):
+        raise ValueError("all lanes must share the node count n")
+    grad_fn = as_grad_fn(grad_fn)
+    K = max(int(t.K) for t in traces)
+    if eval_every <= 0:
+        eval_every = K
+
+    all_eps = [ep for t in traces for ep in t.epochs]
+    H = max(int(ep.trace.schedule.D) for ep in all_eps) + 2
+    raw = [as_comm_plan(ep.topology) for ep in all_eps]
+    kw = max(pl.kw for pl in raw)
+    ka = max(pl.ka for pl in raw)
+    ko = max(pl.ko for pl in raw)
+    e_a = max(max(1, pl.n_edges_a) for pl in raw)
+
+    lanes = [_epoch_lane_plans(list(t.epochs), eval_every, H=H, kw=kw,
+                               ka=ka, ko=ko, e_a=e_a) for t in traces]
+    B = max(wf.width for (_pl, _pd, wfs, _b) in lanes for wf in wfs)
+    cmax = max(b[c + 1] - b[c] for (_pl, _pd, _w, bs) in lanes
+               for b in bs for c in range(len(b) - 1))
+
+    x0 = jnp.asarray(x0, jnp.float32)
+    x0_lanes = (x0 if x0.ndim == 3
+                else jnp.broadcast_to(
+                    x0[None] if x0.ndim == 2
+                    else jnp.tile(x0[None, None, :], (1, n, 1)),
+                    (S, n, x0.shape[-1])))
+    p = int(x0_lanes.shape[-1])
+    p_pad = p
+    if impl == "pallas" and dispatch.resolve_mode(interpret) == "compiled":
+        p_pad = block_pad_width(p)
+    runner = rfast_wavefront_scan(
+        lanes[0][1][0], grad_fn, gamma, donate=True, impl=impl,
+        interpret=interpret, p_real=(p if p_pad != p else None))
+
+    states: list[RFASTState] = []
+    metrics: list[list[dict]] = []
+    for s, (trace, (plans, _padded, wfs, bounds)) in enumerate(
+            zip(traces, lanes)):
+        key, init_key = jax.random.split(jax.random.PRNGKey(seeds[s]))
+        step_keys = jax.random.split(key, int(trace.K))
+        state0 = init_state(plans[0], x0_lanes[s], grad_fn, init_key, H)
+        lane_eval = (None if eval_fn is None
+                     else lambda st, t: dict(eval_fn(st, t)))
+        st, ms = _scan_epochs(list(trace.epochs), plans, wfs, bounds,
+                              runner, step_keys, state0, B=B, cmax=cmax,
+                              e_a=e_a, H=H, p=p, p_pad=p_pad,
+                              eval_every=eval_every, eval_fn=lane_eval,
+                              chunk_cb=None)
+        states.append(st)
+        metrics.append(ms)
     return states, metrics

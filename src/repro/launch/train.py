@@ -43,7 +43,7 @@ from repro.configs import ARCHS, get_config
 from repro.core.protocol import IMPLS
 from repro.core.runtime import edge_arrays, init_node_state, make_rfast_round
 from repro.core.scenario import SCENARIOS, get_scenario
-from repro.core.simulator import run_rfast, zeros_state
+from repro.core.simulator import run_epochs, run_rfast, zeros_state
 from repro.core.topology import get_topology
 from repro.data.objectives import make_lm_problem
 from repro.data.pipeline import LMShardConfig, node_batch
@@ -69,6 +69,9 @@ def main(argv=None) -> dict:
                          f"NetworkScenario ({', '.join(sorted(SCENARIOS))}) "
                          "through the wavefront engine; default: "
                          "synchronous rounds")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="print the SCENARIOS registry (dynamic entries "
+                         "marked) and exit")
     ap.add_argument("--impl", default="jnp", choices=IMPLS,
                     help="protocol backend: jnp (dense GSPMD mixing) or "
                          "pallas (fused update kernel)")
@@ -78,6 +81,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.list_scenarios:
+        for name in sorted(SCENARIOS):
+            sc = get_scenario(name, 7)
+            tag = "  [dynamic: joins/leaves/regional failures]" \
+                if sc.dynamic else ""
+            print(f"{name}{tag}")
+        return {"mode": "list", "scenarios": sorted(SCENARIOS)}
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -91,6 +102,11 @@ def main(argv=None) -> dict:
             ap.error("--momentum applies to the synchronous round engine "
                      "only; the event-level Algorithm 2 recursion has no "
                      "momentum term")
+        if args.ckpt and get_scenario(args.scenario, args.nodes).dynamic:
+            ap.error("--ckpt resume is not supported for dynamic "
+                     "(membership) scenarios: the packed state layout "
+                     "changes at every epoch boundary, so a mid-schedule "
+                     "snapshot is not replayable")
         return _train_async(args, cfg)
     return _train_sync(args, cfg)
 
@@ -183,6 +199,8 @@ def _train_async(args, cfg) -> dict:
                            seq_len=args.seq, seed=args.seed)
     sc = get_scenario(args.scenario, n)
     K = args.steps * n
+    if sc.dynamic:
+        return _train_async_dynamic(args, cfg, prob, topo, sc, K)
     trace = sc.realize(topo, K, seed=args.seed)
     sched = trace.schedule
     # delivered fraction over *attempted* sends (the active agent's
@@ -252,6 +270,67 @@ def _train_async(args, cfg) -> dict:
     return {"mode": "async", "scenario": args.scenario,
             "losses": losses, "events": K,
             "vtime": float(sched.times[-1]), "send_ok": delivered}
+
+
+# --------------------------------------------------------------------- #
+# dynamic scenarios (membership epochs through run_epochs)
+# --------------------------------------------------------------------- #
+def _train_async_dynamic(args, cfg, prob, topo, sc, K) -> dict:
+    """Train under a dynamic-membership scenario: the realized trace is
+    partitioned into topology epochs (joins/leaves/regional failures,
+    with root re-election when a common root enters a crash window) and
+    run through :func:`run_epochs`, which migrates the packed state
+    across every plan change.  ``--ckpt`` is rejected in :func:`main`:
+    the packed layout changes at epoch boundaries, so a mid-schedule
+    snapshot is not replayable."""
+    n = args.nodes
+    et = sc.realize_epochs(topo, K, seed=args.seed)
+    print(f"arch={cfg.name} p={prob.p} ({prob.spec.p_model} model) "
+          f"nodes={n} topo={topo.name} scenario={args.scenario} "
+          f"K={K} epochs={len(et.epochs)} impl={args.impl}")
+    for i, ep in enumerate(et.epochs):
+        act = int(ep.topology.active_mask().sum())
+        print(f"  epoch {i}: t0={ep.t0:7.1f} events {ep.k0}..{ep.k0+ep.K} "
+              f"root={ep.root} active={act}/{n} graph={ep.topology.name}")
+
+    x0 = prob.x0_flat
+    eval_every = max(n, min(K, args.log_every * n))
+    logger = MetricsLogger(args.metrics) if args.metrics else None
+    timer = StepTimer()
+    t0 = time.perf_counter()
+    losses: list[float] = [float(prob.mean_loss(x0))]
+    print(f"event {0:6d} loss {losses[0]:.4f} (init)", flush=True)
+
+    vt = {"t": 0.0}
+
+    def eval_and_log(state, t):
+        l = float(prob.mean_loss(state.x.mean(0)))
+        losses.append(l)
+        vt["t"] = t
+        return {"loss": l, "t": t}
+
+    # run_epochs calls eval_fn then chunk_cb with the same global event
+    # count, so the print lands here where k is known
+    def chunk_cb(state, k):
+        timer.tick()
+        dt = time.perf_counter() - t0
+        print(f"event {k:6d} loss {losses[-1]:.4f} vtime {vt['t']:8.1f} "
+              f"({dt:.1f}s)", flush=True)
+        if logger:
+            logger.log(k, loss=losses[-1], sps=timer.steps_per_sec)
+
+    state, metrics = run_epochs(
+        et, prob, jnp.tile(x0[None], (n, 1)), args.gamma,
+        seed=args.seed, eval_every=eval_every, eval_fn=eval_and_log,
+        impl=args.impl, chunk_cb=chunk_cb)
+    if logger:
+        logger.close()
+    vtime = metrics[-1]["t"] if metrics else 0.0
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} over {K} "
+          f"events, {len(et.epochs)} epochs ({vtime:.1f} vtime)")
+    return {"mode": "async-dynamic", "scenario": args.scenario,
+            "losses": losses, "events": K, "epochs": len(et.epochs),
+            "vtime": float(vtime)}
 
 
 if __name__ == "__main__":

@@ -157,3 +157,34 @@ def test_perf_gate_skips_uncovered_rows(tmp_path):
              "maxerr=0.0e+00"),
     ]
     assert bench_run._perf_gate(records, base, 0.25) == []
+
+
+def test_gate_structural_requires_dynamic_rows(tmp_path):
+    """--structural additionally requires the dynamic-graph families
+    (showdown/root_failover/*, churn/*) whenever the showdown suite ran
+    — even against a baseline that predates those rows."""
+    base = _write_baseline(tmp_path, [
+        _row("showdown", "showdown/straggler/R-FAST", 100.0)])
+    # suite ran but produced no failover/churn rows: both prefixes fail
+    records = [_row("showdown", "showdown/straggler/R-FAST", 100.0)]
+    probs = bench_run._compare(records, base, 0.25, structural=True)
+    assert sorted(p["name"] for p in probs
+                  if p["problem"] == "required-missing") == \
+        ["churn/", "showdown/root_failover/"]
+    # an ERRORED failover row does not satisfy the requirement
+    records += [_row("showdown", "showdown/root_failover/R-FAST", None,
+                     "ERROR:Boom"),
+                _row("showdown", "churn/churn/R-FAST", 50.0)]
+    probs = bench_run._compare(records, base, 0.25, structural=True)
+    assert [p["name"] for p in probs
+            if p["problem"] == "required-missing"] == \
+        ["showdown/root_failover/"]
+    # healthy rows for both prefixes: requirement satisfied
+    records[-2] = _row("showdown", "showdown/root_failover/R-FAST", 60.0,
+                       "vtime=130.0")
+    probs = bench_run._compare(records, base, 0.25, structural=True)
+    assert not any(p["problem"] == "required-missing" for p in probs)
+    # suites that did not run are never required
+    other = [_row("sim", "fast", 1.0)]
+    base2 = _write_baseline(tmp_path, [_row("sim", "fast", 1.0)])
+    assert bench_run._compare(other, base2, 0.25, structural=True) == []

@@ -278,3 +278,118 @@ def test_named_scenarios_realize_everywhere():
         assert np.all(np.diff(times) > 0)
     with pytest.raises(KeyError):
         get_scenario("nope", 4)
+
+
+# ------------------------------------------------------------------ #
+# dynamic membership: epoch timelines (PR 7)
+# ------------------------------------------------------------------ #
+def test_get_scenario_error_lists_names():
+    with pytest.raises(KeyError) as ei:
+        get_scenario("definitely-not-a-scenario", 4)
+    msg = str(ei.value)
+    for name in SCENARIOS:
+        assert name in msg
+
+
+def test_every_scenario_realizes_with_common_root_at_7():
+    """Registry-wide fast-tier validation: every SCENARIOS entry (a)
+    realizes a frozen trace, (b) realizes an epoch timeline, and (c)
+    every epoch's topology satisfies Assumption 2 on its survivors."""
+    from repro.core import robust_tree
+    topo = robust_tree(7)
+    for name in SCENARIOS:
+        sc = get_scenario(name, 7)
+        tr = sc.realize(topo, 300, seed=0)
+        assert tr.schedule.K == 300, name
+        et = sc.realize_epochs(topo, 300, seed=0)
+        assert sum(ep.K for ep in et.epochs) == 300, name
+        for ep in et.epochs:
+            assert ep.topology.common_roots, (name, ep.t0)
+            assert ep.root in ep.topology.common_roots
+
+
+def test_static_scenario_epochs_bit_identical_to_realize():
+    sc = get_scenario("straggler", 7)
+    topo = binary_tree(7)
+    tr = sc.realize(topo, 400, seed=5)
+    et = sc.realize_epochs(topo, 400, seed=5)
+    assert len(et.epochs) == 1 and not et.dynamic
+    ep = et.epochs[0]
+    assert ep.topology is topo          # no renormalization noise
+    for f in ("agent", "stamp_v", "stamp_rho", "times"):
+        np.testing.assert_array_equal(getattr(ep.trace.schedule, f),
+                                      getattr(tr.schedule, f), err_msg=f)
+    np.testing.assert_array_equal(ep.trace.send_ok_w, tr.send_ok_w)
+    np.testing.assert_array_equal(ep.trace.send_ok_a, tr.send_ok_a)
+
+
+def test_root_failover_timeline_re_elects():
+    from repro.core import robust_tree
+    sc = get_scenario("root_failover", 8)
+    et = sc.realize_epochs(robust_tree(8), 1200, seed=1)
+    assert len(et.epochs) == 2 and et.dynamic
+    e0, e1 = et.epochs
+    assert e0.root == 0 and not e0.departed.any()
+    assert e1.root != 0 and e1.departed[0]
+    assert not e1.topology.active_mask()[0]
+    assert e1.k0 == e0.K and e0.k0 == 0
+    assert e1.t0 == 30.0
+    # global virtual time keeps increasing across the boundary
+    assert float(e1.trace.schedule.times[0]) > 0.0
+
+
+def test_churn_timeline_three_epochs():
+    from repro.core import robust_tree
+    sc = get_scenario("churn", 7)
+    et = sc.realize_epochs(robust_tree(7), 1400, seed=0)
+    assert len(et.epochs) == 3
+    e0, e1, e2 = et.epochs
+    # epoch 0 runs without the late joiner, epoch 1 has everyone,
+    # epoch 2 lost the leaver
+    assert not e0.topology.active_mask().all()
+    assert e1.topology.active_mask().all()
+    assert e1.joined.any() and e2.departed.any()
+    assert sum(ep.K for ep in et.epochs) == 1400
+    # joins/leaves never fire inside an epoch's own schedule: every
+    # epoch's agents are members of its topology
+    for ep in et.epochs:
+        act = ep.topology.active_mask()
+        assert act[ep.trace.schedule.agent].all()
+
+
+def test_membership_degrades_to_crash_windows_when_frozen():
+    """realize() on a dynamic scenario must stay runnable: a leaver
+    goes permanently silent, a joiner is silent before its join."""
+    from repro.core import robust_tree
+    sc = get_scenario("churn", 7)
+    tr = sc.realize(robust_tree(7), 1400, seed=0)
+    agents = np.asarray(tr.schedule.agent)
+    times = np.asarray(tr.schedule.times)
+    joiner, leaver = 5, 6
+    assert not np.any(times[agents == joiner] < 40.0)
+    assert not np.any(times[agents == leaver] > 90.0)
+
+
+def test_everyone_leaves_raises():
+    sc = NetworkScenario(leaves=tuple((i, 1.0) for i in range(4)),
+                         name="doom")
+    with pytest.raises(ValueError):
+        sc.realize(binary_tree(4), 4000, seed=0)
+
+
+def test_regional_failure_draw_is_correlated():
+    """One Bernoulli draw fells the whole rack: within a realized trace
+    the rack members are either all silent in the window or all alive."""
+    sc = get_scenario("regional_failure", 7)
+    rack = sc.regional_failures[1][0]          # the p=0.5 window
+    t0, t1 = sc.regional_failures[1][1], sc.regional_failures[1][2]
+    fired = notfired = 0
+    for seed in range(8):
+        tr = sc.realize(undirected_ring(7), 2500, seed=seed)
+        agents = np.asarray(tr.schedule.agent)
+        times = np.asarray(tr.schedule.times)
+        inwin = (times >= t0) & (times < t1)
+        silent = [not np.any(inwin & (agents == i)) for i in rack]
+        assert all(silent) or not any(silent), (seed, silent)
+        fired += all(silent); notfired += not any(silent)
+    assert fired and notfired, "p=0.5 window should fire sometimes"

@@ -66,3 +66,122 @@ def test_ps_structure_common_roots():
     topo = T.parameter_server(8, n_servers=2)
     roots = topo.roots()
     assert set(roots) >= {0, 1}
+
+
+# ------------------------------------------------------------------ #
+# spanning_tree_roots: fast sweep vs brute-force oracle (PR 7)
+# ------------------------------------------------------------------ #
+def test_roots_n1():
+    M = np.ones((1, 1))
+    assert T.spanning_tree_roots(M) == [0]
+    assert T.spanning_tree_roots_dense(M) == [0]
+    assert T.common_roots(M, M) == [0]
+
+
+def test_roots_disconnected():
+    # two self-loop components: nobody reaches everybody
+    M = np.eye(4)
+    assert T.spanning_tree_roots(M) == []
+    assert T.spanning_tree_roots_dense(M) == []
+    # two 2-cycles, still disconnected
+    M = np.eye(4)
+    M[0, 1] = M[1, 0] = M[2, 3] = M[3, 2] = 0.5
+    assert T.spanning_tree_roots(M) == []
+    assert T.common_roots(M, M) == []
+
+
+def test_roots_multi_root_dag():
+    # diamond DAG with two sources: 0 -> 2, 1 -> 2, 2 -> 3.
+    # M[i, j] > 0 means edge j -> i (receiver row), so no single node
+    # reaches all others: sources 0 and 1 cannot reach each other.
+    M = np.eye(4)
+    M[2, 0] = M[2, 1] = M[3, 2] = 1.0
+    assert T.spanning_tree_roots(M) == []
+    # add 0 -> 1 and node 0 becomes the unique root
+    M2 = M.copy()
+    M2[1, 0] = 1.0
+    assert T.spanning_tree_roots(M2) == [0]
+    assert T.spanning_tree_roots_dense(M2) == [0]
+
+
+def test_common_roots_transpose_convention():
+    """common_roots(W, A) intersects G(W) roots with G(A^T) roots: a
+    chain 0->1->2 in W but the REVERSED chain in A (2->...->0, i.e.
+    A[i,j]>0 with j sender) must still yield root 0, because the push
+    graph is judged on A^T."""
+    n = 3
+    W = np.eye(n)
+    for i in range(1, n):
+        W[i, i - 1] = 1.0          # pull from the left: root 0
+    A = np.eye(n)
+    for i in range(1, n):
+        A[i - 1, i] = 1.0          # push right-to-left in G(A)
+    assert T.spanning_tree_roots(W) == [0]
+    # G(A) alone roots at 2; the A^T convention flips it back to 0
+    assert T.spanning_tree_roots(A) == [2]
+    assert T.common_roots(W, A) == [0]
+
+
+def test_roots_fast_matches_oracle_random():
+    rng = np.random.default_rng(7)
+    for _ in range(150):
+        n = int(rng.integers(1, 12))
+        M = np.eye(n)
+        mask = rng.random((n, n)) < rng.uniform(0.05, 0.5)
+        M[mask] = 1.0
+        assert (T.spanning_tree_roots(M)
+                == T.spanning_tree_roots_dense(M)), M
+
+
+def test_roots_active_submask():
+    topo = T.get_topology("robust_tree", 7)
+    act = topo.active_mask().copy()
+    act[0] = False
+    sub = T.subgraph_topology(topo, act)
+    assert sub.common_roots  # sibling rung keeps the skeleton rooted
+    assert 0 not in sub.common_roots
+
+
+# ------------------------------------------------------------------ #
+# robust_tree + per-epoch rebuilds (PR 7)
+# ------------------------------------------------------------------ #
+def test_robust_tree_properties():
+    for n in (2, 3, 7, 8, 15):
+        topo = T.robust_tree(n)
+        assert np.allclose(topo.W.sum(axis=1), 1.0)
+        assert np.allclose(topo.A.sum(axis=0), 1.0)
+        assert np.all(np.diag(topo.W) > 0)
+        assert topo.roots() == [0], "node 0 is the sole common root"
+
+
+def test_robust_tree_survives_root_departure():
+    topo = T.robust_tree(8)
+    act = topo.active_mask().copy()
+    act[0] = False
+    new = T.epoch_topology(topo, act, prefer=0)
+    roots = new.common_roots
+    assert roots and 0 not in roots
+    assert set(roots) <= {1, 2}, "the sibling rung pair takes over"
+    # the rebuilt graph still satisfies Assumptions 1-2 on survivors
+    idx = np.nonzero(act)[0]
+    assert np.allclose(new.W[np.ix_(idx, idx)].sum(axis=1), 1.0)
+    assert np.allclose(new.A[np.ix_(idx, idx)].sum(axis=0), 1.0)
+
+
+def test_binary_tree_root_departure_unrecoverable_vs_retree():
+    """Plain binary_tree minus its root splits G(W); epoch_topology must
+    fall back to the undirected-skeleton re-tree (which binary_tree
+    supports only when the skeleton stays connected — it does not, so
+    the rebuild raises)."""
+    topo = T.binary_tree(7)
+    act = topo.active_mask().copy()
+    act[0] = False
+    with pytest.raises(ValueError, match="Assumption 2 unrecoverable"):
+        T.epoch_topology(topo, act)
+
+
+def test_epoch_topology_static_is_subgraph():
+    topo = T.robust_tree(7)
+    act = topo.active_mask()
+    new = T.epoch_topology(topo, act)
+    assert np.allclose(new.W, topo.W) and np.allclose(new.A, topo.A)
