@@ -5,7 +5,7 @@ the binary tree; we measure virtual time to reach a fixed mean loss.
 """
 from __future__ import annotations
 
-from .common import (csv_row, eval_fn_for, logistic_setup,
+from .common import (csv_row, logistic_setup,
                      run_rfast_logistic, time_to_loss)
 
 

@@ -5,7 +5,6 @@ over synchronous methods (which pay the straggler at every barrier).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

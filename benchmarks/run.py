@@ -66,7 +66,29 @@ def main() -> None:
                          "missing rows, never on timing regressions "
                          "(for CI runners whose timings are too noisy "
                          "for the threshold)")
+    ap.add_argument("--lint", action="store_true",
+                    help="skip the benchmark suites and run the "
+                         "repro.analysis plan-invariant linter + jaxpr "
+                         "auditor over the full scenario x topology "
+                         "matrix; JSON report to --json (or stdout), "
+                         "exit 1 on any diagnostic")
     args = ap.parse_args()
+
+    if args.lint:
+        from repro.analysis.runner import run_all
+
+        report = run_all(quick=args.quick,
+                         progress=lambda m: print(f"[lint] {m}",
+                                                  file=sys.stderr))
+        doc = json.dumps(report, indent=2)
+        if args.json:
+            with open(args.json, "w") as fh:
+                fh.write(doc + "\n")
+        else:
+            print(doc)
+        n_diag = report["summary"]["diagnostics"]
+        print(f"[lint] {n_diag} diagnostic(s)", file=sys.stderr)
+        raise SystemExit(1 if n_diag else 0)
 
     from repro.core.protocol import IMPLS
 

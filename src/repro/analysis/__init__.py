@@ -1,0 +1,19 @@
+"""Static analysis for the R-FAST engines: plan-invariant linting and
+jaxpr auditing.
+
+Two passes over two artifact families:
+
+* :mod:`.planlint` — host-side race/alias/sentinel checks (RF101–RF106)
+  over ``CommPlan`` / ``WavefrontPlan`` / ``EpochTrace`` objects and
+  every transform composition (``pad_plan`` / ``slice_plan`` /
+  ``stack_plans`` / ``flatten_plans``).
+* :mod:`.jaxlint` — jaxpr-level checks (RF201–RF205) over the traced
+  engine bodies and the ``commit_grid`` dispatch site.
+
+Run everything with ``python -m repro.analysis --all`` or
+``benchmarks/run.py --lint``; both emit the JSON report documented in
+DESIGN.md §12.
+"""
+from .diagnostics import CODES, Diagnostic, PlanInvariantError
+
+__all__ = ["CODES", "Diagnostic", "PlanInvariantError"]

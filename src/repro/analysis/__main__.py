@@ -1,0 +1,91 @@
+"""CLI: ``python -m repro.analysis [--all|--plans|--jaxprs] [--json F]``.
+
+Exit status 0 means every pass ran clean; 1 means at least one
+diagnostic fired.  The JSON report goes to stdout (or ``--json FILE``);
+the human summary goes to stderr so pipelines can consume stdout raw.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .diagnostics import CODES
+from .runner import catalog, run_all
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Plan-invariant linter (RF1xx) and jaxpr auditor "
+                    "(RF2xx) for the R-FAST engines.")
+    scope = ap.add_mutually_exclusive_group()
+    scope.add_argument("--all", action="store_true",
+                       help="run both passes over the full registry "
+                            "matrix (default)")
+    scope.add_argument("--plans", action="store_true",
+                       help="planlint only (RF101-RF106)")
+    scope.add_argument("--jaxprs", action="store_true",
+                       help="jaxlint only (RF201-RF205)")
+    scope.add_argument("--codes", action="store_true",
+                       help="print the diagnostic-code catalog and exit")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced matrix (3 scenarios x 3 topologies)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="write the JSON report here instead of stdout")
+    ap.add_argument("--n", type=int, default=7,
+                    help="nodes per topology (default 7)")
+    ap.add_argument("--events", type=int, default=96,
+                    help="schedule length K per realization (default 96)")
+    ap.add_argument("--epoch-events", type=int, default=1200,
+                    help="K for dynamic-membership epoch traces "
+                         "(default 1200)")
+    ap.add_argument("--seeds", default="0",
+                    help="comma-separated realization seeds (default 0)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="progress lines on stderr")
+    args = ap.parse_args(argv)
+
+    if args.codes:
+        print(json.dumps(catalog(), indent=2))
+        return 0
+
+    say = (lambda m: print(f"[analysis] {m}", file=sys.stderr)) \
+        if args.verbose else None
+    seeds = tuple(int(s) for s in args.seeds.split(",") if s != "")
+    run_plans = not args.jaxprs
+    run_jaxprs = not args.plans
+    report = run_all(n=args.n, K=args.events,
+                     K_epochs=args.epoch_events, seeds=seeds,
+                     quick=args.quick, plans=run_plans,
+                     jaxprs=run_jaxprs, progress=say)
+
+    doc = json.dumps(report, indent=2)
+    if args.json:
+        with open(args.json, "w") as fh:
+            fh.write(doc + "\n")
+    else:
+        print(doc)
+
+    n_diag = report["summary"]["diagnostics"]
+    checked = report["summary"]["checked"]
+    passes = "+".join(report["config"]["passes"])
+    print(f"[analysis] {passes}: {n_diag} diagnostic(s); "
+          f"checked {checked.get('comm_plans', 0)} comm plans, "
+          f"{checked.get('wavefront_plans', 0)} wavefront plans, "
+          f"{checked.get('transform_plans', 0)} transformed plans, "
+          f"{checked.get('fleets', 0)} fleets, "
+          f"{checked.get('epoch_traces', 0)} epoch traces; "
+          f"audited {len(report['summary']['audited_jaxprs'])} jaxprs; "
+          f"skipped {len(checked.get('skipped', []))} "
+          "incompatible combos", file=sys.stderr)
+    for d in report["diagnostics"]:
+        info = CODES.get(d["code"])
+        title = f" ({info.title})" if info else ""
+        print(f"[analysis] {d['code']}{title} [{d['subject']}] "
+              f"{d['message']}", file=sys.stderr)
+    return 1 if n_diag else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -27,7 +27,6 @@ from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from .plan import CommPlan, as_comm_plan, matchings  # noqa: F401  (re-export)

@@ -572,6 +572,7 @@ def run_rfast(
     interpret: bool | None = None,
     state0: RFASTState | None = None,
     chunk_cb: Callable[[RFASTState, int], None] | None = None,
+    verify_plans: bool = False,
 ) -> tuple[RFASTState, list[dict]]:
     """Run the full schedule; optionally evaluate every ``eval_every`` events.
 
@@ -609,6 +610,11 @@ def run_rfast(
     Both modes donate the running state between chunks (in-place
     updates): ``eval_fn`` must extract what it needs (floats/arrays of
     its own) rather than retain the state object it is handed.
+
+    ``verify_plans=True`` runs the :mod:`repro.analysis.planlint` pass
+    over the CommPlan and compiled WavefrontPlan before anything is
+    traced, raising :class:`~repro.analysis.PlanInvariantError` on any
+    diagnostic — the debug belt-and-braces mode; benches leave it off.
     """
     if mode not in ("wavefront", "event"):
         raise ValueError(f"mode must be 'wavefront' or 'event', got {mode!r}")
@@ -646,6 +652,12 @@ def run_rfast(
         return state, metrics
 
     if mode == "event":
+        if verify_plans:
+            from ..analysis import planlint
+            planlint.check_or_raise(
+                planlint.lint_comm_plan(
+                    plan, topo if isinstance(topo, Topology) else None),
+                "run_rfast(verify_plans)")
         chunk = rfast_scan(plan, grad_fn, gamma, H, donate=True)
         agent = jnp.asarray(schedule.agent)
         stamp_v = jnp.asarray(schedule.stamp_v)
@@ -671,6 +683,14 @@ def run_rfast(
         p_pad = block_pad_width(p)
 
     wf = build_wavefront_plan(schedule, plan, H, break_every=eval_every)
+    if verify_plans:
+        from ..analysis import planlint
+        planlint.check_or_raise(
+            planlint.lint_comm_plan(
+                plan, topo if isinstance(topo, Topology) else None)
+            + planlint.lint_wavefront_plan(wf, comm=plan,
+                                           schedule=schedule, H=H),
+            "run_rfast(verify_plans)")
     runner = rfast_wavefront_scan(
         plan, grad_fn, gamma, donate=True, impl=impl, interpret=interpret,
         p_real=(p if p_pad != p else None))
@@ -753,6 +773,7 @@ def run_sweep(
     eval_fn: Callable[[RFASTState, float], dict] | None = None,
     impl: str = "jnp",
     interpret: bool | None = None,
+    verify_plans: bool = False,
 ) -> tuple[list[RFASTState], list[list[dict]]]:
     """Run a fleet of S independent experiments as ONE compiled program.
 
@@ -889,7 +910,19 @@ def run_sweep(
             [pad_plan(slice_plan(wf, b[c], b[c + 1]),
                       width=B, n_waves=cmax, e_a=e_a)
              for c in range(len(chunk_starts))]))
-    fleet = flatten_plans(stack_plans(rechunked))
+    stacked = stack_plans(rechunked)
+    fleet = flatten_plans(stacked)
+    if verify_plans:
+        from ..analysis import planlint
+        diags = []
+        for s in range(S):
+            diags += planlint.lint_comm_plan(
+                padded_plans[s], subject=f"lane{s}/comm")
+            diags += planlint.lint_wavefront_plan(
+                rechunked[s], comm=padded_plans[s],
+                schedule=schedules[s], H=H, subject=f"lane{s}")
+        diags += planlint.lint_flatten(stacked, fleet, subject="fleet")
+        planlint.check_or_raise(diags, "run_sweep(verify_plans)")
     waves = wave_inputs(fleet, step_keys.reshape(S * K, 2))
 
     runner = rfast_sweep_scan(grad_fn, gamma, ko=ko, n_per_lane=n,
@@ -1068,6 +1101,7 @@ def run_epochs(
     impl: str = "jnp",
     interpret: bool | None = None,
     chunk_cb: Callable[[RFASTState, int], None] | None = None,
+    verify_plans: bool = False,
 ) -> tuple[RFASTState, list[dict]]:
     """Run an epochized trace (:meth:`NetworkScenario.realize_epochs`)
     through the wavefront engine: one compiled scan body for ALL epochs.
@@ -1107,6 +1141,16 @@ def run_epochs(
     e_a = max(max(1, pl.n_edges_a) for pl in raw_plans)
     plans, padded, wfs, bounds = _epoch_lane_plans(
         epochs, eval_every, H=H, kw=kw, ka=ka, ko=ko, e_a=e_a)
+    if verify_plans:
+        from ..analysis import planlint
+        diags = planlint.lint_epoch_trace(epoch_trace)
+        for i, ep in enumerate(epochs):
+            diags += planlint.lint_comm_plan(padded[i],
+                                             subject=f"ep{i}/comm")
+            diags += planlint.lint_wavefront_plan(
+                wfs[i], comm=padded[i], schedule=ep.trace.schedule,
+                H=H, subject=f"ep{i}")
+        planlint.check_or_raise(diags, "run_epochs(verify_plans)")
     B = max(wf.width for wf in wfs)
     cmax = max(b[c + 1] - b[c] for b in bounds for c in range(len(b) - 1))
 
@@ -1137,6 +1181,7 @@ def run_sweep_epochs(
     eval_fn: Callable[[RFASTState, float], dict] | None = None,
     impl: str = "jnp",
     interpret: bool | None = None,
+    verify_plans: bool = False,
 ) -> tuple[list[RFASTState], list[list[dict]]]:
     """Fleet of epochized lanes (e.g. one scenario × many seeds from
     :func:`repro.core.scenario.realize_epochs_batch`) through ONE shared
@@ -1178,6 +1223,19 @@ def run_sweep_epochs(
 
     lanes = [_epoch_lane_plans(list(t.epochs), eval_every, H=H, kw=kw,
                                ka=ka, ko=ko, e_a=e_a) for t in traces]
+    if verify_plans:
+        from ..analysis import planlint
+        diags = []
+        for s, (trace, (_pl, padded_s, wfs_s, _b)) in enumerate(
+                zip(traces, lanes)):
+            diags += planlint.lint_epoch_trace(trace,
+                                               subject=f"lane{s}")
+            for i, ep in enumerate(trace.epochs):
+                diags += planlint.lint_wavefront_plan(
+                    wfs_s[i], comm=padded_s[i],
+                    schedule=ep.trace.schedule, H=H,
+                    subject=f"lane{s}/ep{i}")
+        planlint.check_or_raise(diags, "run_sweep_epochs(verify_plans)")
     B = max(wf.width for (_pl, _pd, wfs, _b) in lanes for wf in wfs)
     cmax = max(b[c + 1] - b[c] for (_pl, _pd, _w, bs) in lanes
                for b in bs for c in range(len(b) - 1))

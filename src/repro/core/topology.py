@@ -413,12 +413,41 @@ def _tree_topology(name: str, n: int, parent: list[int | None]) -> Topology:
     return Topology(name, n, W, A)
 
 
+def _checked_builder(fn: Callable[..., Topology]) -> Callable[..., Topology]:
+    """Wrap a topology builder so every constructed graph is re-validated
+    (Assumption 1 weight structure + Assumption 2 common root) and any
+    violation is reported with the *builder's* name, not just the matrix
+    row that tripped.  ``Topology.__post_init__`` already validates, but a
+    bare "W must be row-stochastic" from deep inside a sweep over eight
+    builders is unattributable; this pins the blame."""
+    import functools
+
+    @functools.wraps(fn)
+    def build(n: int, *args, **kwargs) -> Topology:
+        try:
+            topo = fn(n, *args, **kwargs)
+            validate_weights(topo.W, topo.A)
+        except ValueError as e:
+            raise ValueError(
+                f"topology builder {fn.__name__!r} (n={n}) produced an "
+                f"invalid graph: {e}") from e
+        if not topo.roots():
+            raise ValueError(
+                f"topology builder {fn.__name__!r} (n={n}) violates "
+                "Assumption 2: G(W) and G(A^T) share no common root")
+        return topo
+
+    return build
+
+
+@_checked_builder
 def binary_tree(n: int) -> Topology:
     """Complete-ish binary tree rooted at node 0 (Fig. 3a)."""
     parent: list[int | None] = [None] + [(i - 1) // 2 for i in range(1, n)]
     return _tree_topology(f"binary_tree_{n}", n, parent)
 
 
+@_checked_builder
 def robust_tree(n: int) -> Topology:
     """Binary tree + bidirectional sibling rungs, sole common root 0.
 
@@ -447,12 +476,14 @@ def robust_tree(n: int) -> Topology:
     return Topology(f"robust_tree_{n}", n, W, A)
 
 
+@_checked_builder
 def line(n: int) -> Topology:
     """Line graph 0 - 1 - ... - n-1 rooted at 0 (Fig. 3c)."""
     parent: list[int | None] = [None] + list(range(n - 1))
     return _tree_topology(f"line_{n}", n, parent)
 
 
+@_checked_builder
 def parameter_server(n: int, n_servers: int = 1) -> Topology:
     """Star / PS structure: servers 0..n_servers-1 as common roots."""
     in_w: dict[int, list[int]] = {}
@@ -472,6 +503,7 @@ def parameter_server(n: int, n_servers: int = 1) -> Topology:
     return Topology(f"ps_{n}_{n_servers}", n, W, A)
 
 
+@_checked_builder
 def directed_ring(n: int) -> Topology:
     """Directed ring i -> i+1 (mod n) for both graphs (Fig. 3b)."""
     in_edges = {i: [(i - 1) % n] for i in range(n)}
@@ -481,6 +513,7 @@ def directed_ring(n: int) -> Topology:
     return Topology(f"directed_ring_{n}", n, W, A)
 
 
+@_checked_builder
 def undirected_ring(n: int) -> Topology:
     """Symmetric ring (both directions) — used by D-PSGD/AD-PSGD baselines."""
     in_edges = {i: [(i - 1) % n, (i + 1) % n] for i in range(n)}
@@ -489,6 +522,7 @@ def undirected_ring(n: int) -> Topology:
     return Topology(f"undirected_ring_{n}", n, W, A)
 
 
+@_checked_builder
 def exponential(n: int) -> Topology:
     """Directed exponential graph: i -> (i + 2^k) mod n."""
     hops = [2 ** k for k in range(max(1, int(np.ceil(np.log2(n)))))]
@@ -499,6 +533,7 @@ def exponential(n: int) -> Topology:
     return Topology(f"exponential_{n}", n, W, A)
 
 
+@_checked_builder
 def mesh2d(n: int) -> Topology:
     """2-D grid (4-neighbour, undirected) topology."""
     rows = int(np.floor(np.sqrt(n)))

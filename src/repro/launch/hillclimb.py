@@ -13,7 +13,7 @@ force_host_devices()
 import argparse
 import json
 
-from repro.launch.dryrun import case_path, run_case
+from repro.launch.dryrun import run_case
 from repro.launch.mesh import HW
 
 

@@ -10,12 +10,9 @@ Shapes (assigned):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.plan import build_comm_plan

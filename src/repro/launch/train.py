@@ -80,6 +80,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verify-plans", action="store_true",
+                    help="run the repro.analysis plan-invariant linter "
+                         "over every compiled plan before training "
+                         "(raises PlanInvariantError on any diagnostic)")
     args = ap.parse_args(argv)
 
     if args.list_scenarios:
@@ -259,7 +263,8 @@ def _train_async(args, cfg) -> dict:
     state, _ = run_rfast(
         topo, sched, prob, jnp.tile(x0[None], (n, 1)), args.gamma,
         seed=args.seed, eval_every=eval_every, eval_fn=eval_and_log,
-        mode="wavefront", impl=args.impl, state0=state0, chunk_cb=chunk_cb)
+        mode="wavefront", impl=args.impl, state0=state0, chunk_cb=chunk_cb,
+        verify_plans=args.verify_plans)
     if logger:
         logger.close()
     if len(losses) > 1:
@@ -322,7 +327,7 @@ def _train_async_dynamic(args, cfg, prob, topo, sc, K) -> dict:
     state, metrics = run_epochs(
         et, prob, jnp.tile(x0[None], (n, 1)), args.gamma,
         seed=args.seed, eval_every=eval_every, eval_fn=eval_and_log,
-        impl=args.impl, chunk_cb=chunk_cb)
+        impl=args.impl, chunk_cb=chunk_cb, verify_plans=args.verify_plans)
     if logger:
         logger.close()
     vtime = metrics[-1]["t"] if metrics else 0.0

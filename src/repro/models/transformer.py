@@ -7,8 +7,7 @@ FLOP counts for the while-loop trip count).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

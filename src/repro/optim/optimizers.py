@@ -7,7 +7,6 @@ plus AdamW for the transformer examples.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -17,7 +17,6 @@ def main():
                  "whisper-large-v3"):
         cfg = get_config(arch).reduced()
         for shape in ("train_4k", "decode_32k"):
-            import dataclasses
             from repro.launch.specs import SHAPES
             info = dict(SHAPES[shape])
             # shrink shapes for CI: seq 256/1k, batch 16

@@ -1,0 +1,105 @@
+"""``assert_no_recompiles`` — a context manager that turns the
+dispatch-cache counters (and, where available, JAX's own compile-event
+hooks) into a hard assertion.
+
+The commit-grid dispatch cache (:mod:`repro.kernels.rfast_update.dispatch`)
+is the repo's recompile telltale: every distinct launch signature costs
+one ``miss``/``entry``, and a steady-state engine loop must ride cached
+entries (``hits``) only.  Tests used to read ``dispatch.stats()`` by
+hand; this helper centralizes the delta bookkeeping so the assertion
+reads as intent::
+
+    with assert_no_recompiles(expect_entries=1) as rec:
+        run_sweep(...)
+    assert rec.misses == 1
+
+    with assert_no_recompiles(expect_entries=0, fresh=False) as rec2:
+        run_sweep(...)          # same shapes: cache must absorb it
+    assert rec2.hits > 0
+
+When JAX exposes its monitoring hooks (``jax._src.monitoring``), the
+manager also counts backend-compile events fired inside the block and
+exposes them as ``rec.jax_compiles`` — informational by default, or a
+hard bound via ``max_jax_compiles=``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+from repro.kernels.rfast_update import dispatch
+
+__all__ = ["RecompileRecord", "assert_no_recompiles"]
+
+
+@dataclasses.dataclass
+class RecompileRecord:
+    """Counter deltas observed across an ``assert_no_recompiles`` block."""
+
+    entries: int = 0       # new dispatch-cache entries (launch signatures)
+    misses: int = 0        # dispatch lookups that had to build a launch
+    hits: int = 0          # dispatch lookups served from the cache
+    jax_compiles: int = 0  # backend-compile events (when hooks available)
+    jax_hooked: bool = False
+
+
+def _jax_compile_listener(record: RecompileRecord):
+    """Best-effort JAX compile-event hook; returns ``(listener, remove)``
+    or ``(None, None)`` when this JAX build has no monitoring API."""
+    try:
+        from jax._src import monitoring
+        register = monitoring.register_event_duration_secs_listener
+        unregister = monitoring._unregister_event_duration_listener_by_callback
+    except (ImportError, AttributeError):
+        return None, None
+
+    def listener(event: str, duration: float, **kwargs) -> None:
+        if "compile" in event:
+            record.jax_compiles += 1
+
+    def remove() -> None:
+        unregister(listener)
+
+    register(listener)
+    return listener, remove
+
+
+@contextlib.contextmanager
+def assert_no_recompiles(expect_entries: int = 1, *, fresh: bool = True,
+                         max_jax_compiles: int | None = None):
+    """Assert the block adds exactly ``expect_entries`` dispatch-cache
+    entries (RF205's runtime counterpart).
+
+    ``fresh=True`` clears the cache first, so ``expect_entries`` counts
+    signatures built by the block itself; ``fresh=False`` measures
+    against the warm cache — ``expect_entries=0`` then asserts the block
+    rode existing launches only.  ``max_jax_compiles`` optionally bounds
+    backend-compile events too (skipped silently when the running JAX
+    exposes no monitoring hooks).
+
+    Yields a :class:`RecompileRecord`; its fields hold the observed
+    deltas after the block exits, so tests can make finer assertions
+    (``rec.misses``, ``rec.hits``) on top of the entry check.
+    """
+    if fresh:
+        dispatch.clear()
+    base = dispatch.stats()
+    rec = RecompileRecord()
+    listener, remove = _jax_compile_listener(rec)
+    rec.jax_hooked = listener is not None
+    try:
+        yield rec
+    finally:
+        if remove is not None:
+            remove()
+    after = dispatch.stats()
+    rec.entries = after["entries"] - base["entries"]
+    rec.misses = after["misses"] - base["misses"]
+    rec.hits = after["hits"] - base["hits"]
+    assert rec.entries == expect_entries, (
+        f"dispatch cache grew by {rec.entries} launch signature(s), "
+        f"expected {expect_entries}: {base} -> {after}")
+    if max_jax_compiles is not None and rec.jax_hooked:
+        assert rec.jax_compiles <= max_jax_compiles, (
+            f"{rec.jax_compiles} backend-compile events, "
+            f"allowed {max_jax_compiles}")

@@ -176,17 +176,15 @@ def test_sweep_epochs_lane_matches_solo_run():
 def test_churn_dispatch_cache_one_entry_per_shape():
     """A 3-epoch churn run under impl='pallas' must reuse ONE compiled
     commit_grid entry: epoch transitions change data, never shapes."""
-    from repro.kernels.rfast_update import dispatch
+    from tests.helpers.recompiles import assert_no_recompiles
     n, K = 7, 1400
     prob = _problem(n)
     topo = robust_tree(n)
     et = get_scenario("churn", n).realize_epochs(topo, K, seed=0)
     assert len(et.epochs) == 3
     x0 = jnp.zeros((n, prob.p), jnp.float32)
-    dispatch.clear()
-    st_p, _ = run_epochs(et, prob, x0, 5e-3, seed=0, impl="pallas")
-    stats = dispatch.stats()
-    assert stats["entries"] == 1, stats
+    with assert_no_recompiles(expect_entries=1):
+        st_p, _ = run_epochs(et, prob, x0, 5e-3, seed=0, impl="pallas")
     # and the pallas path agrees with the jnp path on the same trace
     st_j, _ = run_epochs(et, prob, x0, 5e-3, seed=0, impl="jnp")
     np.testing.assert_allclose(np.asarray(st_p.x), np.asarray(st_j.x),

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import binary_tree, directed_ring
-from repro.core.runtime import (RFASTNodeState, edge_arrays, init_node_state,
+from repro.core.runtime import (edge_arrays, init_node_state,
                                 make_rfast_round, runtime_tracked_mass)
 
 

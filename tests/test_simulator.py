@@ -7,7 +7,7 @@ import pytest
 from repro.core import (
     binary_tree, directed_ring, exponential, get_topology,
     generate_schedule, round_robin_schedule,
-    run_rfast, init_state, rfast_scan, tracked_mass,
+    run_rfast, tracked_mass,
 )
 from repro.core.baselines import run_push_pull_sync
 from repro.data import make_logistic_problem

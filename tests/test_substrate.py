@@ -1,5 +1,4 @@
 """Optimizers, schedules, checkpointing, data pipeline."""
-import os
 
 import jax
 import jax.numpy as jnp

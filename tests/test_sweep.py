@@ -264,7 +264,7 @@ def test_run_sweep_pallas_single_dispatch_signature():
     signature (heterogeneous lanes are padded to shared maxima), and a
     re-run over the same schedules with different RNG seeds re-traces
     onto the cached entry — zero new misses."""
-    from repro.kernels.rfast_update import dispatch
+    from tests.helpers.recompiles import assert_no_recompiles
 
     n, p, K = 5, 6, 120
     gfn, _ = quad_grad_fn(n, p, noise=0.1)
@@ -273,20 +273,19 @@ def test_run_sweep_pallas_single_dispatch_signature():
               for s, t in enumerate(topos)]
     x0 = jnp.zeros((n, p), jnp.float32)
 
-    dispatch.clear()
-    run_sweep(topos, scheds, gfn, x0, 0.02, seeds=[0, 1, 2], impl="pallas")
-    s1 = dispatch.stats()
     # one signature for the whole heterogeneous fleet: every chunk of
     # every lane rides the same padded wave shape
-    assert s1["entries"] == 1, s1
-    assert s1["misses"] == 1, s1
+    with assert_no_recompiles(expect_entries=1) as rec:
+        run_sweep(topos, scheds, gfn, x0, 0.02, seeds=[0, 1, 2],
+                  impl="pallas")
+    assert rec.misses == 1, rec
 
     # same schedules, new seeds: new trace, same cached launch
-    run_sweep(topos, scheds, gfn, x0, 0.02, seeds=[7, 8, 9], impl="pallas")
-    s2 = dispatch.stats()
-    assert s2["misses"] == s1["misses"], (s1, s2)
-    assert s2["hits"] > s1["hits"], (s1, s2)
-    dispatch.clear()
+    with assert_no_recompiles(expect_entries=0, fresh=False) as rec2:
+        run_sweep(topos, scheds, gfn, x0, 0.02, seeds=[7, 8, 9],
+                  impl="pallas")
+    assert rec2.misses == 0, rec2
+    assert rec2.hits > 0, rec2
 
 
 def test_wavefront_pallas_block_padded_p_is_inert():

@@ -15,7 +15,7 @@ from repro.core import (binary_tree, directed_ring, exponential,
                         tracked_mass)
 from repro.core.plan import build_comm_plan
 from repro.core.schedule import build_wavefront_plan
-from repro.kernels.rfast_update.ops import rfast_commit, rfast_update
+from repro.kernels.rfast_update.ops import rfast_update
 
 jax.config.update("jax_enable_x64", False)
 
