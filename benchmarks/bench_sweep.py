@@ -14,6 +14,11 @@ Rows:
   check on real benchmark traffic).
 * ``sweep/mixed_n<n>_S<S>`` — a (topology × scenario) fleet, exercising
   degree padding and the ρ-layout remap across heterogeneous lanes.
+* ``sweep/fleet_sharded_d<D>`` — the same fleet through the mesh-mapped
+  engine (``run_sweep(mesh=...)``) with the lane axis spread over D
+  devices; derived carries ``speedup_vs_d1``, the lane-throughput
+  scaling the mesh exists for.  Which D values appear depends on the
+  visible device count (forced host devices on CPU); ``d1`` always runs.
 """
 from __future__ import annotations
 
@@ -119,6 +124,27 @@ def run(S: int = 8, n: int = 7, K: int = 2000,
     rows.append(csv_row(f"sweep/mixed_n{n}_S{Sm}",
                         t_mixed / (Sm * Km) * 1e6,
                         f"topologies=3;scenarios=2;K={Km}"))
+
+    # --- lane throughput vs device count (mesh-mapped engine) ----------
+    from repro.launch.mesh import make_sweep_mesh
+    ndev = len(jax.devices())
+    ds = sorted({1} | {d for d in (2, 4, ndev) if 1 < d <= ndev})
+    t_d1 = None
+    for d in ds:
+        mesh = make_sweep_mesh(lanes=d, param_shards=1)
+
+        def fleet_sharded():
+            sts, _ = run_sweep(topo, scheds, prob, x0, gamma,
+                               seeds=range(S), mesh=mesh)
+            jax.block_until_ready(sts[-1].x)
+
+        t_d = _median_wall(fleet_sharded)
+        if t_d1 is None:
+            t_d1 = t_d
+        rows.append(csv_row(f"sweep/fleet_sharded_d{d}",
+                            t_d / (S * K) * 1e6,
+                            f"devices={d};S={S};K={K};"
+                            f"speedup_vs_d1={t_d1 / t_d:.2f}x"))
     return rows
 
 

@@ -107,7 +107,7 @@ def main() -> None:
     suites = {
         "topologies": lambda: bench_topologies.run(
             K=4000 if args.quick else 12_000),
-        "scaling": lambda: bench_scaling.run(),
+        "scaling": lambda: bench_scaling.run(quick=args.quick),
         "straggler": lambda: bench_straggler.run(
             rounds=400 if args.quick else 1200),
         "packet_loss": lambda: bench_packet_loss.run(
@@ -214,13 +214,19 @@ def _perf_gate(records: list[dict], baseline_path: str,
     return problems
 
 
-# Row-name prefixes every showdown run must produce: the dynamic-graph
+# Row-name prefixes every run of a suite must produce: the dynamic-graph
 # robustness families (epochized root failover incl. the frozen-stall
-# control row, and churn/regional failures).  The structural gate
-# requires them even against baselines that predate the rows, so a
-# future PR cannot silently drop the failover scenarios.
+# control row, and churn/regional failures), the mesh-mapped scaling
+# rows past the single-device ceiling (n63..n255 + the 100M-parameter
+# LM through the sharded wavefront engine), and the lane-throughput
+# sharding row.  The structural gate requires them even against
+# baselines that predate the rows, so a future PR cannot silently drop
+# the failover scenarios or the production-scale paths.
 REQUIRED_PREFIXES = {
     "showdown": ("showdown/root_failover/", "churn/"),
+    "scaling": ("scaling/n63", "scaling/n127", "scaling/n255",
+                "lm100m/"),
+    "sweep": ("sweep/fleet_sharded_",),
 }
 
 

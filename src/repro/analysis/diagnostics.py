@@ -117,6 +117,20 @@ CODES: dict[str, CodeInfo] = {c.code: c for c in [
         "PR 6's shape-specialized dispatch relies on ONE compile per "
         "fleet shape; a key that includes a varying component "
         "recompiles every chunk."),
+    CodeInfo(
+        "RF206", "jaxlint", "state-sized collective in the mesh body",
+        "No collective inside the mesh-mapped sweep body materializes "
+        "output at or above one lane group's full-width node state "
+        "(S_loc*n*4*p_pad bytes) — inside a fully-manual shard_map "
+        "region beyond-shard data can only arrive via a collective, so "
+        "this bounds every path to accidental replication.  The "
+        "designed per-wave gradient all_gather reconstructs at most "
+        "the mixed iterates (<= threshold/4).",
+        "The 'accidentally replicated' failure mode of PR 9's "
+        "sharded parameter axis: an all_gather of the packed "
+        "(S_loc*n,4,p) state (or a state-sized psum) makes every "
+        "device hold the full 100M-parameter fleet again, silently "
+        "undoing the model-axis sharding the mesh exists for."),
 ]}
 
 

@@ -1,4 +1,4 @@
-"""Jaxpr auditing of the traced engines (RF201–RF205).
+"""Jaxpr auditing of the traced engines (RF201–RF206).
 
 The plan linter rejects bad *inputs*; this pass rejects bad *programs*:
 it walks the jaxprs that :func:`~repro.core.simulator.rfast_scan`,
@@ -23,7 +23,7 @@ import numpy as np
 from .diagnostics import Diagnostic
 
 __all__ = ["iter_eqns", "audit_jaxpr", "audit_donation",
-           "audit_dispatch", "audit_engines"]
+           "audit_dispatch", "audit_mesh_collectives", "audit_engines"]
 
 # host round-trip primitives (RF201) and loop primitives they must not
 # appear inside
@@ -35,6 +35,11 @@ _WIDE_DTYPES = ("float64", "complex128")
 # default RF203 threshold: a materialized rank>=3 intermediate of 16M
 # elements (64 MiB at f32) is never the fused path
 DEFAULT_BROADCAST_THRESHOLD = 1 << 24
+# RF206: collectives whose OUTPUT can materialize beyond-shard data
+# inside a fully-manual shard_map region (ppermute is excluded — it only
+# moves shard-sized data, it cannot grow it)
+_COLLECTIVE_PRIMS = frozenset({"all_gather", "all_to_all", "psum",
+                               "pmax", "pmin"})
 
 
 def _sub_jaxprs(params: dict):
@@ -164,6 +169,53 @@ def audit_dispatch(run_once, *, subject, expect_entries=1, repeats=2
     return diags
 
 
+def audit_mesh_collectives(closed, *, subject, state_bytes_threshold
+                           ) -> list[Diagnostic]:
+    """RF206: no collective inside the mesh-mapped wave body materializes
+    (or reduces over) state-sized data.
+
+    Inside a fully-manual shard_map region the ONLY way a device can
+    obtain data beyond its own shard is a collective, so auditing the
+    collectives' output sizes is a complete check for the "accidentally
+    replicated" failure mode: an ``all_gather`` of the packed
+    ``(S_loc·n, 4, p)`` state (or a state-sized ``psum``) means the
+    parameter sharding silently degenerated to replication.
+
+    ``state_bytes_threshold`` is one lane group's node state at FULL
+    parameter width (``S_loc · n · 4 · p_pad · itemsize``).  The
+    legitimate per-wave gradient gather reconstructs only the mixed
+    iterates — at most ``S_loc·n`` rows of ONE of the four node slots,
+    i.e. <= threshold/4 — so a collective at or above the threshold is
+    never the designed data flow.
+    """
+    jaxpr = closed.jaxpr if isinstance(closed, jax.core.ClosedJaxpr) \
+        else closed
+    diags = []
+    for eqn, _ in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name not in _COLLECTIVE_PRIMS:
+            continue
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            shape = getattr(aval, "shape", None)
+            if shape is None:
+                continue
+            nbytes = int(np.prod(shape, dtype=np.int64)
+                         * np.dtype(aval.dtype).itemsize)
+            if nbytes >= state_bytes_threshold:
+                diags.append(Diagnostic(
+                    "RF206", subject,
+                    f"collective {name!r} materializes {nbytes} bytes "
+                    f"(shape {tuple(shape)}) inside the mesh-mapped wave "
+                    f"body — >= the {state_bytes_threshold}-byte "
+                    "full-width state threshold: the shard layout has "
+                    "degenerated to replication",
+                    {"primitive": name, "shape": tuple(shape),
+                     "bytes": nbytes,
+                     "threshold": state_bytes_threshold}))
+    return diags
+
+
 # ------------------------------------------------------------------ #
 # the standard engine audit the CLI runs
 # ------------------------------------------------------------------ #
@@ -267,6 +319,30 @@ def audit_engines(*, n=5, p=8, K=48, seed=0,
                          donate=True), (fpacked, fwaves), (0,),
         subject="rfast_sweep_scan[donate]")
     audited.append("rfast_sweep_scan[donate]")
+
+    # mesh-mapped sweep engine (RF206 + the standard RF2xx checks) on a
+    # single-device (1,1) mesh — shard_map bodies are reachable through
+    # iter_eqns, and the collective/size audit is shape-generic
+    from ..core.simulator import _mesh_sweep_scan
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    mpacked = jax.tree.map(lambda a: a[None], fpacked)
+    mwaves = jax.tree.map(lambda a: a[None], fwaves)
+    state_bytes = S * n * 4 * p * np.dtype(np.float32).itemsize
+    for impl in ("jnp", "pallas"):
+        mrunner = _mesh_sweep_scan(gfn, gamma, ko=ko_max, n_per_lane=n,
+                                   mesh=mesh, donate=False, impl=impl)
+        cj = jax.make_jaxpr(mrunner)(mpacked, mwaves)
+        diags += audit_jaxpr(cj, subject=f"mesh_sweep_scan[{impl}]", **kw)
+        diags += audit_mesh_collectives(
+            cj, subject=f"mesh_sweep_scan[{impl}]",
+            state_bytes_threshold=state_bytes)
+        audited.append(f"mesh_sweep_scan[{impl}]")
+    diags += audit_donation(
+        _mesh_sweep_scan(gfn, gamma, ko=ko_max, n_per_lane=n, mesh=mesh,
+                         donate=True), (mpacked, mwaves), (0,),
+        subject="mesh_sweep_scan[donate]")
+    audited.append("mesh_sweep_scan[donate]")
 
     # run_epochs body: the same sweep engine over an epoch topology
     # with an active mask (isolated nodes exercise the sentinel paths)

@@ -34,7 +34,9 @@ from .protocol import descent_step, mailbox_merge, momentum_mix, tracking_step
 from .topology import Topology
 
 __all__ = ["ShardedState", "matchings", "make_sharded_round",
-           "init_sharded_state", "sharded_state_specs"]
+           "init_sharded_state", "sharded_state_specs",
+           "partial_auto_shard_map_supported", "_shard_map",
+           "packed_sweep_specs"]
 
 GradFn = Callable[[Any, Any, jax.Array], tuple[jnp.ndarray, Any]]
 
@@ -131,6 +133,32 @@ def sharded_state_specs(state: ShardedState, node_axes) -> ShardedState:
         step=P(), x=f(state.x), z=f(state.z), g_prev=f(state.g_prev),
         rho_out=f(state.rho_out), rho_buf=f(state.rho_buf),
         mail_v=f(state.mail_v), m=f(state.m))
+
+
+def packed_sweep_specs(lane_axis: str = "data",
+                       param_axis: str | None = None):
+    """Per-leaf spec builders for the mesh-mapped fleet sweep.
+
+    The sweep engine stacks its packed state and wave tables on a leading
+    *lane-group* axis (one group of ``S_loc`` lanes per ``lane_axis``
+    device) and keeps the flat parameter axis last.  Returns two
+    ``leaf -> PartitionSpec`` callables for ``jax.tree.map``:
+
+    * ``state_spec``: ``P(lane_axis, None, ..., param_axis)`` — group
+      axis sharded over the lanes, flat-p axis sharded over
+      ``param_axis`` (replicated when ``param_axis`` is None).
+    * ``wave_spec``:  ``P(lane_axis, None, ...)`` — plan tables and step
+      keys are lane-group data; their trailing axes are table axes, not
+      parameters, so only the leading axis is sharded.
+    """
+
+    def state_spec(leaf):
+        return P(lane_axis, *([None] * (leaf.ndim - 2)), param_axis)
+
+    def wave_spec(leaf):
+        return P(lane_axis, *([None] * (leaf.ndim - 1)))
+
+    return state_spec, wave_spec
 
 
 def make_sharded_round(

@@ -63,6 +63,7 @@ from ..kernels.rfast_update.grid import block_pad_width, commit_grid
 from ..kernels.rfast_update.ops import rfast_commit
 from .paramvec import GradProvider, as_grad_fn
 from .plan import CommPlan, as_comm_plan, pad_comm_plan
+from .runtime_sharded import _shard_map, packed_sweep_specs
 from .protocol import consensus_mix, descent_step, mailbox_merge, tracking_step
 from .schedule import (Schedule, build_wavefront_plan, concat_plans,
                        flatten_plans, grid_gather_tables, pad_plan,
@@ -552,6 +553,123 @@ def rfast_sweep_scan(
     return jax.jit(run_waves, donate_argnums=(0,) if donate else ())
 
 
+def _mesh_axis_size(mesh, axis: str | None) -> int:
+    if axis is None or axis not in mesh.axis_names:
+        return 1
+    return int(dict(mesh.shape)[axis])
+
+
+def _mesh_sweep_scan(
+    grad_fn: Objective,
+    gamma: float,
+    *,
+    ko: int,
+    n_per_lane: int,
+    mesh,
+    lane_axis: str = "data",
+    param_axis: str | None = "model",
+    donate: bool = True,
+    impl: str = "jnp",
+    interpret: bool | None = None,
+    p_real: int | None = None,
+):
+    """Mesh-mapped fleet engine: :func:`rfast_sweep_scan` distributed over
+    a device mesh via the :func:`~repro.core.runtime_sharded._shard_map`
+    compat shim.
+
+    Layout (see :func:`~repro.core.runtime_sharded.packed_sweep_specs`):
+    the packed state and wave tables carry a leading *lane-group* axis —
+    one block of ``S_loc`` consecutive lanes per ``lane_axis`` device —
+    and the flat parameter axis is split over ``param_axis``.  Inside the
+    region each device runs the unmodified :func:`_wave_step` scan over
+    its own group's flattened program, so lane groups never communicate:
+    lane parallelism is embarrassingly parallel by construction.
+
+    When ``param_axis`` has size M > 1 every state array holds only its
+    ``p_loc = p_pad // M`` slice of the flat axis.  The protocol math is
+    linear and elementwise along p, so it runs unchanged on slices; only
+    the gradient needs the full iterate, which is reconstructed per wave
+    by ONE tiled ``all_gather`` over ``param_axis`` (O(p) per lane — the
+    same traffic a data-parallel all-reduce would pay) and the fresh
+    gradient is sliced back to the local shard.  ``p_real`` strips the
+    block/shard padding around the ``grad_fn`` call exactly as in the
+    unsharded engines.
+
+    The shapes reaching :func:`commit_grid` inside the region are the
+    LOCAL shard shapes (``S_loc·B`` lanes, width ``p_loc``), so the
+    dispatch cache keys on the shard shape automatically and the whole
+    mesh still resolves ONE launch signature per wave.  State in/out
+    specs are identical and the outer jit donates the state, so donation
+    survives the shard_map boundary (XLA aliases shard buffers).
+    """
+    if impl not in ("jnp", "pallas"):
+        raise ValueError(f"impl must be 'jnp' or 'pallas', got {impl!r}")
+    if lane_axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no lane axis {lane_axis!r} "
+                         f"(axes: {mesh.axis_names})")
+    mode = dispatch.resolve_mode(interpret) if impl == "pallas" else "emulate"
+    grad_fn = as_grad_fn(grad_fn)
+    M = _mesh_axis_size(mesh, param_axis)
+    axes = ((lane_axis, param_axis) if M > 1 else (lane_axis,))
+
+    if M > 1:
+        def lane_grad(i, x_loc, key):
+            # one collective per wave: rebuild the full iterate for the
+            # gradient, then keep only this device's shard of g.  The
+            # zero pad tail sits at the END of the global flat axis, so
+            # the tiled gather reconstructs global order directly.
+            x_full = jax.lax.all_gather(x_loc, param_axis, axis=0,
+                                        tiled=True)
+            p_pad = x_full.shape[0]
+            if p_real is not None and p_real != p_pad:
+                g = grad_fn(i % n_per_lane, x_full[:p_real], key)
+                g = jnp.pad(g, (0, p_pad - p_real))
+            else:
+                g = grad_fn(i % n_per_lane, x_full, key)
+            m = jax.lax.axis_index(param_axis)
+            p_loc = x_loc.shape[0]
+            return jax.lax.dynamic_slice(g, (m * p_loc,), (p_loc,))
+        step = partial(_wave_step, grad_fn=lane_grad, gamma=gamma, ko=ko,
+                       impl=impl, mode=mode, p_real=None)
+    else:
+        lane_grad = lambda i, x, key: grad_fn(i % n_per_lane, x, key)
+        step = partial(_wave_step, grad_fn=lane_grad, gamma=gamma, ko=ko,
+                       impl=impl, mode=mode, p_real=p_real)
+
+    def local_run(state: PackedState, waves: _WaveInputs):
+        # strip this device's singleton group axis, scan, put it back
+        st = jax.tree.map(lambda a: a[0], state)
+        wv = jax.tree.map(lambda a: a[0], waves)
+        st, _ = jax.lax.scan(step, st, wv)
+        return jax.tree.map(lambda a: a[None], st)
+
+    st_spec, wv_spec = packed_sweep_specs(
+        lane_axis, param_axis if M > 1 else None)
+
+    def run_waves(state: PackedState, waves: _WaveInputs):
+        st_specs = jax.tree.map(st_spec, state)
+        wv_specs = jax.tree.map(wv_spec, waves)
+        fn = _shard_map(local_run, mesh, (st_specs, wv_specs), st_specs,
+                        axes)
+        return fn(state, waves)
+
+    return jax.jit(run_waves, donate_argnums=(0,) if donate else ())
+
+
+def sweep_mesh_shardings(mesh, lane_axis: str = "data",
+                         param_axis: str | None = "model"):
+    """``(state_leaf -> NamedSharding, wave_leaf -> NamedSharding)`` for
+    placing the group-stacked fleet state / wave tables on ``mesh``
+    before entering :func:`_mesh_sweep_scan` (avoids a first-call
+    resharding transfer)."""
+    from jax.sharding import NamedSharding
+    M = _mesh_axis_size(mesh, param_axis)
+    st_spec, wv_spec = packed_sweep_specs(
+        lane_axis, param_axis if M > 1 else None)
+    return (lambda l: NamedSharding(mesh, st_spec(l)),
+            lambda l: NamedSharding(mesh, wv_spec(l)))
+
+
 def tracked_mass(state: RFASTState) -> jnp.ndarray:
     """LHS of the Lemma-3 invariant: Σ_i z_i + Σ_e (ρ_e − ρ̃_e)."""
     return state.z.sum(axis=0) + (state.rho - state.rho_buf).sum(axis=0)
@@ -774,6 +892,9 @@ def run_sweep(
     impl: str = "jnp",
     interpret: bool | None = None,
     verify_plans: bool = False,
+    mesh=None,
+    lane_axis: str = "data",
+    param_axis: str | None = "model",
 ) -> tuple[list[RFASTState], list[list[dict]]]:
     """Run a fleet of S independent experiments as ONE compiled program.
 
@@ -808,6 +929,17 @@ def run_sweep(
         slots — through ONE fused grid launch.
       interpret: tri-state dispatch override (None = compiled on TPU /
         jnp grid emulation elsewhere; True = interpreter oracle).
+      mesh: optional ``jax.sharding.Mesh`` — distribute the fleet via
+        :func:`_mesh_sweep_scan`: lanes are split into contiguous groups
+        over ``lane_axis`` (the fleet is padded to a multiple of the
+        axis size by replicating the last lane; replica results are
+        dropped) and the flat parameter axis is sharded over
+        ``param_axis`` when that axis has size > 1, so p >= 100M states
+        fit in per-device memory.  Per lane the results match the
+        unsharded engine to fp32 tolerance (tested).  ``None`` (default)
+        keeps the single-device path bit-for-bit unchanged.
+      lane_axis / param_axis: mesh axis names (``"data"`` / ``"model"``,
+        the :func:`repro.launch.mesh.make_sweep_mesh` convention).
 
     Returns:
       ``(states, metrics)`` — the final per-lane :class:`RFASTState` list
@@ -840,6 +972,22 @@ def run_sweep(
     if eval_every <= 0:
         eval_every = K
 
+    # mesh-mapped fleet: pad the lane list to a multiple of the lane-axis
+    # size by replicating the last lane (replica outputs are dropped), so
+    # every device owns one group of S_loc consecutive lanes
+    D = M = 1
+    if mesh is not None:
+        if lane_axis not in mesh.axis_names:
+            raise ValueError(f"mesh has no lane axis {lane_axis!r} "
+                             f"(axes: {mesh.axis_names})")
+        D = _mesh_axis_size(mesh, lane_axis)
+        M = _mesh_axis_size(mesh, param_axis)
+    S_pad = -(-S // D) * D
+    plans = plans + [plans[-1]] * (S_pad - S)
+    schedules = schedules + [schedules[-1]] * (S_pad - S)
+    seeds = seeds + [seeds[-1]] * (S_pad - S)
+    S_loc = S_pad // D
+
     # fleet-wide shape maxima: history depth, degrees, ρ layout
     H = max(int(s.D) for s in schedules) + 2
     kw = max(pl.kw for pl in plans)
@@ -857,17 +1005,25 @@ def run_sweep(
                          f"expected {S}")
     x0_lanes = (x0 if x0.ndim == 3
                 else jnp.broadcast_to(x0[None], (S,) + x0.shape))
+    if S_pad != S:
+        x0_lanes = jnp.concatenate(
+            [x0_lanes, jnp.broadcast_to(x0_lanes[-1:],
+                                        (S_pad - S,) + x0_lanes.shape[1:])])
     p = int(x0_lanes.shape[-1])
-    # compiled grid launches need block-multiple widths (inert zero tail)
+    # compiled grid launches need block-multiple widths (inert zero
+    # tail); a sharded param axis additionally needs p_pad % M == 0 so
+    # every device holds an equal p_loc slice
     p_pad = p
     if impl == "pallas" and dispatch.resolve_mode(interpret) == "compiled":
-        p_pad = block_pad_width(p)
+        p_pad = block_pad_width(p, M)
+    elif M > 1:
+        p_pad = -(-p // M) * M
     lane_keys, init_keys = [], []
-    for s in range(S):
+    for s in range(S_pad):
         key, init_key = jax.random.split(jax.random.PRNGKey(seeds[s]))
         lane_keys.append(jax.random.split(key, K))
         init_keys.append(init_key)
-    step_keys = jnp.stack(lane_keys)                        # (S, K, 2)
+    step_keys = jnp.stack(lane_keys)                        # (S_pad, K, 2)
 
     # fleet init (the paper init per lane: z = g_prev = ∇f(x0; ζ0) from
     # the lane's init key, v = ρ = ρ̃ = hist = 0) — lane s's g0 is
@@ -886,10 +1042,19 @@ def run_sweep(
     if p_pad != p:
         nodes = jnp.pad(nodes, ((0, 0), (0, 0), (0, 0), (0, p_pad - p)))
     z = lambda *s_: jnp.zeros(s_, jnp.float32)
-    packed = PackedState(nodes=nodes.reshape(S * n, 4, p_pad),
-                         rho2=z(2 * S * e_a, p_pad),
-                         v_hist=z(H, S * n, p_pad),
-                         rho_hist=z(H, S * e_a, p_pad))
+    if mesh is None:
+        packed = PackedState(nodes=nodes.reshape(S_pad * n, 4, p_pad),
+                             rho2=z(2 * S_pad * e_a, p_pad),
+                             v_hist=z(H, S_pad * n, p_pad),
+                             rho_hist=z(H, S_pad * e_a, p_pad))
+    else:
+        # group-stacked layout: each device's block is the flat fleet
+        # state of ITS OWN S_loc lanes, so per-group plans flatten with
+        # group-local offsets and no cross-group indices exist
+        packed = PackedState(nodes=nodes.reshape(D, S_loc * n, 4, p_pad),
+                             rho2=z(D, 2 * S_loc * e_a, p_pad),
+                             v_hist=z(D, H, S_loc * n, p_pad),
+                             rho_hist=z(D, H, S_loc * e_a, p_pad))
 
     # per-lane plans, then chunk-aligned fleet stacking: chunk c of every
     # lane is padded to the fleet-wide max chunk wave count, so chunk c
@@ -897,7 +1062,7 @@ def run_sweep(
     # scan body serves all chunks of all lanes
     wfs = [build_wavefront_plan(schedules[s], padded_plans[s], H,
                                 break_every=eval_every, e_a=e_a)
-           for s in range(S)]
+           for s in range(S_pad)]
     chunk_starts = list(range(0, K, eval_every))
     bounds = [[int(np.searchsorted(wf.event_start, c0))
                for c0 in chunk_starts] + [wf.n_waves] for wf in wfs]
@@ -910,40 +1075,74 @@ def run_sweep(
             [pad_plan(slice_plan(wf, b[c], b[c + 1]),
                       width=B, n_waves=cmax, e_a=e_a)
              for c in range(len(chunk_starts))]))
-    stacked = stack_plans(rechunked)
-    fleet = flatten_plans(stacked)
     if verify_plans:
         from ..analysis import planlint
         diags = []
-        for s in range(S):
+        for s in range(S_pad):
             diags += planlint.lint_comm_plan(
                 padded_plans[s], subject=f"lane{s}/comm")
             diags += planlint.lint_wavefront_plan(
                 rechunked[s], comm=padded_plans[s],
                 schedule=schedules[s], H=H, subject=f"lane{s}")
-        diags += planlint.lint_flatten(stacked, fleet, subject="fleet")
+    if mesh is None:
+        stacked = stack_plans(rechunked)
+        fleet = flatten_plans(stacked)
+        if verify_plans:
+            diags += planlint.lint_flatten(stacked, fleet, subject="fleet")
+        waves = wave_inputs(fleet, step_keys.reshape(S_pad * K, 2))
+        runner = rfast_sweep_scan(
+            grad_fn, gamma, ko=ko, n_per_lane=n, donate=True, impl=impl,
+            interpret=interpret, p_real=(p if p_pad != p else None))
+    else:
+        # one flattened program PER lane group, stacked on the leading
+        # device axis: every group shares the (cmax, S_loc·B) wave shape,
+        # so the shard_map body compiles once for all groups
+        group_waves = []
+        for g in range(D):
+            stacked = stack_plans(rechunked[g * S_loc:(g + 1) * S_loc])
+            fleet = flatten_plans(stacked)
+            if verify_plans:
+                diags += planlint.lint_flatten(stacked, fleet,
+                                               subject=f"fleet/g{g}")
+            group_waves.append(wave_inputs(
+                fleet,
+                step_keys[g * S_loc:(g + 1) * S_loc].reshape(S_loc * K,
+                                                             2)))
+        waves = jax.tree.map(lambda *a: jnp.stack(a), *group_waves)
+        runner = _mesh_sweep_scan(
+            grad_fn, gamma, ko=ko, n_per_lane=n, mesh=mesh,
+            lane_axis=lane_axis, param_axis=param_axis, donate=True,
+            impl=impl, interpret=interpret,
+            p_real=(p if p_pad != p else None))
+        st_sh, wv_sh = sweep_mesh_shardings(mesh, lane_axis, param_axis)
+        packed = jax.device_put(packed, jax.tree.map(st_sh, packed))
+        waves = jax.device_put(waves, jax.tree.map(wv_sh, waves))
+    if verify_plans:
         planlint.check_or_raise(diags, "run_sweep(verify_plans)")
-    waves = wave_inputs(fleet, step_keys.reshape(S * K, 2))
 
-    runner = rfast_sweep_scan(grad_fn, gamma, ko=ko, n_per_lane=n,
-                              donate=True, impl=impl, interpret=interpret,
-                              p_real=(p if p_pad != p else None))
+    def lane_state(pk, s, k):
+        if mesh is None:
+            return _lane_state(pk, s, k, S=S_pad, n=n, e_a=e_a,
+                               e_a_lane=e_a_lane[s], p=p)
+        g, j = divmod(s, S_loc)
+        grp = jax.tree.map(lambda a: a[g], pk)
+        return _lane_state(grp, j, k, S=S_loc, n=n, e_a=e_a,
+                           e_a_lane=e_a_lane[s], p=p)
+
     metrics: list[list[dict]] = [[] for _ in range(S)]
-    lane_kw = dict(S=S, n=n, e_a=e_a, p=p)
     e_a_lane = [max(1, pl.n_edges_a) for pl in plans]
     for ci in range(len(chunk_starts)):
-        w = jax.tree.map(lambda a: a[ci * cmax:(ci + 1) * cmax], waves)
-        packed = runner(packed, w)
+        sl = (lambda a: a[:, ci * cmax:(ci + 1) * cmax]) if mesh is not \
+            None else (lambda a: a[ci * cmax:(ci + 1) * cmax])
+        packed = runner(packed, jax.tree.map(sl, waves))
         e = min(K, (ci + 1) * eval_every)
         if eval_fn is not None:
             for s in range(S):
-                m = eval_fn(_lane_state(packed, s, e,
-                                        e_a_lane=e_a_lane[s], **lane_kw),
+                m = eval_fn(lane_state(packed, s, e),
                             float(schedules[s].times[e - 1]))
                 m["k"] = e
                 metrics[s].append(m)
-    states = [_lane_state(packed, s, K, e_a_lane=e_a_lane[s], **lane_kw)
-              for s in range(S)]
+    states = [lane_state(packed, s, K) for s in range(S)]
     return states, metrics
 
 
@@ -1182,6 +1381,9 @@ def run_sweep_epochs(
     impl: str = "jnp",
     interpret: bool | None = None,
     verify_plans: bool = False,
+    mesh=None,
+    lane_axis: str = "data",
+    param_axis: str | None = "model",
 ) -> tuple[list[RFASTState], list[list[dict]]]:
     """Fleet of epochized lanes (e.g. one scenario × many seeds from
     :func:`repro.core.scenario.realize_epochs_batch`) through ONE shared
@@ -1195,6 +1397,12 @@ def run_sweep_epochs(
     one ``commit_grid`` dispatch-cache entry per shape).  Per lane the
     result equals :func:`run_epochs` of that (trace, seed) — same key
     streams, same migrations.
+
+    ``mesh`` shards the flat PARAMETER axis over ``param_axis`` via
+    :func:`_mesh_sweep_scan` (large-p epochized runs); the lane axis of
+    the mesh must have size 1 — lanes stay sequential here because their
+    membership timelines (epoch cuts, migrations) are host-driven and
+    lane-local.  Use :func:`run_sweep` for lane-parallel meshes.
     """
     traces = list(epoch_traces)
     S = len(traces)
@@ -1247,12 +1455,42 @@ def run_sweep_epochs(
                     else jnp.tile(x0[None, None, :], (1, n, 1)),
                     (S, n, x0.shape[-1])))
     p = int(x0_lanes.shape[-1])
+    M = 1
+    if mesh is not None:
+        if _mesh_axis_size(mesh, lane_axis) != 1:
+            raise ValueError(
+                "run_sweep_epochs shards the parameter axis only; the "
+                f"mesh's {lane_axis!r} axis must have size 1 "
+                "(lane-parallel meshes go through run_sweep)")
+        M = _mesh_axis_size(mesh, param_axis)
     p_pad = p
     if impl == "pallas" and dispatch.resolve_mode(interpret) == "compiled":
-        p_pad = block_pad_width(p)
-    runner = rfast_wavefront_scan(
-        lanes[0][1][0], grad_fn, gamma, donate=True, impl=impl,
-        interpret=interpret, p_real=(p if p_pad != p else None))
+        p_pad = block_pad_width(p, M)
+    elif M > 1:
+        p_pad = -(-p // M) * M
+    if mesh is None:
+        runner = rfast_wavefront_scan(
+            lanes[0][1][0], grad_fn, gamma, donate=True, impl=impl,
+            interpret=interpret, p_real=(p if p_pad != p else None))
+    else:
+        ko_fleet = lanes[0][1][0].ko
+        base = _mesh_sweep_scan(
+            grad_fn, gamma, ko=ko_fleet, n_per_lane=n, mesh=mesh,
+            lane_axis=lane_axis, param_axis=param_axis, donate=True,
+            impl=impl, interpret=interpret,
+            p_real=(p if p_pad != p else None))
+        st_sh, wv_sh = sweep_mesh_shardings(mesh, lane_axis, param_axis)
+
+        def runner(packed, w):
+            # _scan_epochs drives the unsharded packed layout; bridge it
+            # through the mesh engine's singleton group axis (one extra
+            # device_put/copy per chunk, amortized by the wave scan)
+            pk = jax.tree.map(lambda a: a[None], packed)
+            wv = jax.tree.map(lambda a: a[None], w)
+            pk = jax.device_put(pk, jax.tree.map(st_sh, pk))
+            wv = jax.device_put(wv, jax.tree.map(wv_sh, wv))
+            pk = base(pk, wv)
+            return jax.tree.map(lambda a: a[0], pk)
 
     states: list[RFASTState] = []
     metrics: list[list[dict]] = []

@@ -31,6 +31,13 @@ Execution modes (:func:`resolve_mode` maps the engines' tri-state
 
 ``interpret=None`` (the default everywhere) resolves to ``compiled`` on
 TPU and ``emulate`` elsewhere.
+
+Under the mesh-mapped sweep engine the commit runs *inside* a shard_map
+region, so the shapes that reach :func:`lookup` are the **local shard
+shapes** — lane count ``S_loc·B`` and flat width ``p_pad // M``.  The
+key therefore shard-localizes automatically: every device of a wave
+resolves the same signature, and a whole mesh-mapped fleet still
+compiles to ONE launch per shard shape (pinned by the sweep tests).
 """
 from __future__ import annotations
 

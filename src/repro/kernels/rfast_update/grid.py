@@ -54,10 +54,17 @@ from .kernel import BLK_R, LANE
 __all__ = ["commit_grid", "block_pad_width"]
 
 
-def block_pad_width(p: int) -> int:
-    """Smallest flat width >= p that tiles into (BLK_R, LANE) blocks."""
+def block_pad_width(p: int, shards: int = 1) -> int:
+    """Smallest flat width >= p that tiles into (BLK_R, LANE) blocks.
+
+    With ``shards > 1`` the width is additionally a multiple of
+    ``shards`` whose *per-shard* slice still tiles into whole blocks, so
+    a parameter axis split over a ``model`` mesh axis hands each device a
+    launch-compatible local width (``block_pad_width(p, M) // M``).
+    """
     per = BLK_R * LANE
-    return -(-int(p) // per) * per
+    loc = -(-int(p) // int(shards))
+    return int(shards) * (-(-loc // per) * per)
 
 
 def _grid_kernel(ka: int, ko: int):

@@ -8,14 +8,47 @@ import to obtain the placeholder devices.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
-__all__ = ["make_production_mesh", "node_axes_for", "HW"]
+__all__ = ["make_production_mesh", "make_sweep_mesh", "node_axes_for",
+           "HW"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_sweep_mesh(*, lanes: int | None = None, param_shards: int = 1,
+                    devices=None, lane_axis: str = "data",
+                    param_axis: str = "model"):
+    """(lane-groups × param-shards) mesh for the mesh-mapped fleet sweep
+    (``repro.core.simulator.run_sweep(mesh=...)``).
+
+    Uses however many devices the backend exposes — real accelerators or
+    the CPU dev loop's forced host devices
+    (:func:`repro.launch.xla_env.force_host_devices` /
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``, which must be
+    set before jax initializes its backends).  Defaults: all devices on
+    the lane axis, no parameter sharding.  Unlike
+    :func:`make_production_mesh` this never *requires* a device count —
+    any ``lanes * param_shards <= len(devices)`` prefix works, so the
+    same call runs on 1-device CI and a 256-chip pod.
+    """
+    devices = list(devices) if devices is not None else jax.devices()
+    m = int(param_shards)
+    if m < 1:
+        raise ValueError(f"param_shards must be >= 1, got {m}")
+    d = int(lanes) if lanes is not None else max(1, len(devices) // m)
+    if d < 1:
+        raise ValueError(f"lanes must be >= 1, got {d}")
+    if d * m > len(devices):
+        raise ValueError(f"mesh {d}x{m} needs {d * m} devices, have "
+                         f"{len(devices)} (force more host devices via "
+                         "repro.launch.xla_env.force_host_devices)")
+    arr = np.array(devices[:d * m]).reshape(d, m)
+    return jax.sharding.Mesh(arr, (lane_axis, param_axis))
 
 
 def node_axes_for(mesh, *, n_nodes: int | None = None) -> tuple[str, ...]:

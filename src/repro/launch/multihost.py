@@ -10,6 +10,19 @@ batches; checkpoint save/restore goes through the process-0 host).
 
     # per host (e.g. via scripts/launch_pod.sh or GKE/xpk):
     python -m repro.launch.multihost --arch llama3-8b --steps 100
+
+Mesh-mapped sweep contract (DESIGN.md §13): the fleet engine
+(``run_sweep(mesh=...)``) follows the same recipe on a pod.  Every host
+calls :func:`initialize_distributed`, builds the SAME
+``make_sweep_mesh(lanes=D, param_shards=M)`` over the *global* device
+list, and calls ``run_sweep`` with identical host inputs (plans and wave
+arrays are host-computed numpy — cheap and deterministic, so replicating
+the build is simpler and safer than broadcasting it).  ``device_put``
+with the §13 NamedShardings then places only each process's addressable
+shards; the single-host CPU dev loop
+(``repro.launch.xla_env.force_host_devices`` before jax init) runs the
+exact same program on forced host devices, which is what the sharded
+tests and the ``scaling/n*``/``lm100m/*`` bench rows pin.
 """
 from __future__ import annotations
 

@@ -5,6 +5,16 @@ Every param leaf gets *logical* axes from a name table; logical axes map
 to mesh axes through a rule dict; a divisibility check drops any mapping
 that does not divide the dim (e.g. whisper's vocab 51866 % 16 != 0 →
 vocab falls back to replicated and the embed dim picks up 'model').
+
+The name-table path covers the model *pytree*.  The wavefront sweep's
+packed flat substrate has no leaf names to resolve — its specs are the
+fixed per-rank builders in
+:func:`repro.core.runtime_sharded.packed_sweep_specs` (lane-group axis →
+'data', flat parameter axis → 'model'; DESIGN.md §13).  Divisibility is
+handled upstream there too: ``run_sweep`` pads lanes to a multiple of
+the 'data' size and the flat axis to a multiple of the 'model' size
+(``block_pad_width(p, shards)`` under the pallas commit), so the
+fall-back-to-replicated rule this module needs never applies.
 """
 from __future__ import annotations
 

@@ -19,6 +19,7 @@ from repro.core.plan import build_comm_plan
 from repro.core.runtime import init_node_state, make_rfast_round
 from repro.core.runtime_sharded import (init_sharded_state,
                                         make_sharded_round,
+                                        packed_sweep_specs,
                                         partial_auto_shard_map_supported)
 from repro.core.topology import binary_tree
 from repro.models import sharding as msh
@@ -28,7 +29,14 @@ from repro.models.transformer import (decode_step, forward, init_cache,
 from . import shardings as sh
 
 __all__ = ["SHAPES", "LONG_WINDOW", "shape_supported", "build_train",
-           "build_prefill", "build_decode", "build_case"]
+           "build_prefill", "build_decode", "build_case",
+           "packed_sweep_specs"]
+# packed_sweep_specs is re-exported for launch-level consumers: the
+# mesh-mapped fleet sweep's packed state has no logical axis names (a
+# flat (group, lanes·n, 4, p) substrate), so it bypasses the name-table
+# resolution below and uses the fixed per-rank specs from
+# core/runtime_sharded — lane-group axis -> lane_axis ('data'), flat
+# parameter axis -> param_axis ('model').  See DESIGN.md §13.
 
 SHAPES = {
     "train_4k": dict(seq=4096, batch=256, kind="train"),

@@ -43,7 +43,8 @@ from repro.configs import ARCHS, get_config
 from repro.core.protocol import IMPLS
 from repro.core.runtime import edge_arrays, init_node_state, make_rfast_round
 from repro.core.scenario import SCENARIOS, get_scenario
-from repro.core.simulator import run_epochs, run_rfast, zeros_state
+from repro.core.simulator import (run_epochs, run_rfast, run_sweep,
+                                  zeros_state)
 from repro.core.topology import get_topology
 from repro.data.objectives import make_lm_problem
 from repro.data.pipeline import LMShardConfig, node_batch
@@ -75,6 +76,15 @@ def main(argv=None) -> dict:
     ap.add_argument("--impl", default="jnp", choices=IMPLS,
                     help="protocol backend: jnp (dense GSPMD mixing) or "
                          "pallas (fused update kernel)")
+    ap.add_argument("--param-shards", type=int, default=1,
+                    help="shard the flat parameter axis over this many "
+                         "mesh devices (async regime only: routes through "
+                         "the mesh-mapped run_sweep — DESIGN.md §13; on "
+                         "CPU combine with --host-devices)")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force this many XLA host-platform devices "
+                         "before the backend initializes (the CPU dev "
+                         "loop for --param-shards)")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--metrics", default="", help="JSONL metrics path")
     ap.add_argument("--ckpt-every", type=int, default=100)
@@ -85,6 +95,9 @@ def main(argv=None) -> dict:
                          "over every compiled plan before training "
                          "(raises PlanInvariantError on any diagnostic)")
     args = ap.parse_args(argv)
+    if args.host_devices:
+        from repro.launch.xla_env import force_host_devices
+        force_host_devices(args.host_devices)
 
     if args.list_scenarios:
         for name in sorted(SCENARIOS):
@@ -111,7 +124,20 @@ def main(argv=None) -> dict:
                      "(membership) scenarios: the packed state layout "
                      "changes at every epoch boundary, so a mid-schedule "
                      "snapshot is not replayable")
+        if args.param_shards > 1:
+            if args.ckpt:
+                ap.error("--param-shards trains through run_sweep(mesh="
+                         "...), which has no mid-schedule resume; drop "
+                         "--ckpt or --param-shards")
+            if get_scenario(args.scenario, args.nodes).dynamic:
+                ap.error("--param-shards is not supported for dynamic "
+                         "(membership) scenarios yet")
         return _train_async(args, cfg)
+    if args.param_shards > 1:
+        ap.error("--param-shards shards the wavefront engine's flat "
+                 "parameter axis; the synchronous rounds already shard "
+                 "the model pytree via GSPMD (pass --scenario for the "
+                 "async regime)")
     return _train_sync(args, cfg)
 
 
@@ -260,11 +286,35 @@ def _train_async(args, cfg) -> dict:
               f"vtime {t:8.1f} ({dt:.1f}s)", flush=True)
         return m
 
-    state, _ = run_rfast(
-        topo, sched, prob, jnp.tile(x0[None], (n, 1)), args.gamma,
-        seed=args.seed, eval_every=eval_every, eval_fn=eval_and_log,
-        mode="wavefront", impl=args.impl, state0=state0, chunk_cb=chunk_cb,
-        verify_plans=args.verify_plans)
+    if args.param_shards > 1:
+        # one lane, flat parameter axis sharded over `model`: the
+        # p >= 100M path (DESIGN.md §13).  No chunk_cb/state0 hooks —
+        # --ckpt was rejected in main(); logging rides eval_and_log.
+        from repro.launch.mesh import make_sweep_mesh
+        mesh = make_sweep_mesh(lanes=1, param_shards=args.param_shards)
+        print(f"mesh: 1x{args.param_shards} (lane x param shards) over "
+              f"{len(jax.devices())} devices")
+
+        def eval_log_sharded(state, t):
+            m = eval_and_log(state, t)
+            timer.tick()
+            if logger:
+                logger.log(min(K, k0 + (len(losses) - 1) * eval_every),
+                           loss=m["loss"], sps=timer.steps_per_sec)
+            return m
+
+        states, _ = run_sweep(
+            topo, [sched], prob, jnp.tile(x0[None], (n, 1)), args.gamma,
+            seeds=[args.seed], eval_every=eval_every,
+            eval_fn=eval_log_sharded, impl=args.impl,
+            verify_plans=args.verify_plans, mesh=mesh)
+        state = states[0]
+    else:
+        state, _ = run_rfast(
+            topo, sched, prob, jnp.tile(x0[None], (n, 1)), args.gamma,
+            seed=args.seed, eval_every=eval_every, eval_fn=eval_and_log,
+            mode="wavefront", impl=args.impl, state0=state0,
+            chunk_cb=chunk_cb, verify_plans=args.verify_plans)
     if logger:
         logger.close()
     if len(losses) > 1:

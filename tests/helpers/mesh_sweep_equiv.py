@@ -1,0 +1,118 @@
+"""Subprocess helper: mesh-mapped ``run_sweep`` vs the unsharded fleet
+engine on a forced 4-device host mesh.
+
+Checks, on a randomized (topology x scenario x seed) lane matrix:
+
+* per-lane final-state equivalence at fp32 tolerance for every mesh
+  factorization of 4 devices — lane-parallel (4,1), mixed (2,2) and
+  param-sharded (1,4) — including lane padding (S=5 -> 8 groups of 2);
+* the pallas dispatch pin: a heterogeneous mesh-mapped fleet resolves
+  ONE commit-grid launch signature (the local shard shape), and a re-run
+  with fresh seeds rides the cache with zero new entries;
+* ``run_sweep_epochs`` with a param-sharded (1,4) mesh matches its
+  unsharded result across membership-epoch migrations.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=4.
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.scenario import get_scenario  # noqa: E402
+from repro.core.simulator import run_sweep, run_sweep_epochs  # noqa: E402
+from repro.core.topology import get_topology  # noqa: E402
+from repro.launch.mesh import make_sweep_mesh  # noqa: E402
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from recompiles import assert_no_recompiles  # noqa: E402
+
+FIELDS = ("x", "v", "z", "g_prev", "rho", "rho_buf", "v_hist", "rho_hist")
+
+
+def assert_lanes_close(ref, got, what):
+    for s, (a, b) in enumerate(zip(ref, got)):
+        for f in FIELDS:
+            np.testing.assert_allclose(
+                getattr(a, f), getattr(b, f), rtol=2e-5, atol=2e-5,
+                err_msg=f"{what}: lane {s} field {f}")
+
+
+def quad_grad(n, p, seed):
+    A = jnp.asarray(np.random.default_rng(seed).normal(size=(n, p)),
+                    jnp.float32)
+
+    def gfn(i, x, key):
+        return A[i] * x + 0.01 * jax.random.normal(key, x.shape)
+
+    return gfn
+
+
+def main():
+    assert len(jax.devices()) == 4, jax.devices()
+    n, K, S, p = 5, 24, 5, 7          # S=5 pads to 8 lanes; p % 4 != 0
+    rng = np.random.default_rng(20260809)
+    topo_names = ["binary_tree", "line", "robust_tree"]
+    sc_names = ["uniform", "packet_loss", "churn"]
+    topos = [get_topology(topo_names[rng.integers(len(topo_names))], n)
+             for _ in range(S)]
+    scheds = [get_scenario(sc_names[rng.integers(len(sc_names))], n)
+              .realize(t, K, seed=int(rng.integers(1 << 16))).schedule
+              for t in topos]
+    seeds = [int(rng.integers(1 << 16)) for _ in range(S)]
+    gfn = quad_grad(n, p, 0)
+    x0 = jnp.zeros(p)
+    kw = dict(seeds=seeds, eval_every=K // 2)
+
+    ref, _ = run_sweep(topos, scheds, gfn, x0, 0.01, **kw)
+    jax.block_until_ready([s.x for s in ref])
+    for d, m in [(4, 1), (2, 2), (1, 4)]:
+        mesh = make_sweep_mesh(lanes=d, param_shards=m)
+        got, _ = run_sweep(topos, scheds, gfn, x0, 0.01, mesh=mesh, **kw)
+        # block between programs: interleaving a 4-device program with
+        # the next compile starves the collective rendezvous on CPU
+        jax.block_until_ready([s.x for s in got])
+        assert_lanes_close(ref, got, f"mesh ({d},{m})")
+        print(f"OK mesh-vs-unsharded ({d},{m})")
+
+    # dispatch pin: ONE launch signature for the heterogeneous mesh
+    # fleet (the local shard shape), cache-riding re-run with new seeds
+    mesh = make_sweep_mesh(lanes=2, param_shards=2)
+    with assert_no_recompiles(expect_entries=1) as rec:
+        got, _ = run_sweep(topos, scheds, gfn, x0, 0.01, mesh=mesh,
+                           impl="pallas", **kw)
+        jax.block_until_ready([s.x for s in got])
+    assert rec.misses == 1, rec
+    assert_lanes_close(ref, got, "pallas mesh (2,2)")
+    kw2 = dict(kw, seeds=[s + 1 for s in seeds])
+    with assert_no_recompiles(expect_entries=0, fresh=False) as rec2:
+        got2, _ = run_sweep(topos, scheds, gfn, x0, 0.01, mesh=mesh,
+                            impl="pallas", **kw2)
+        jax.block_until_ready([s.x for s in got2])
+    assert rec2.misses == 0 and rec2.hits > 0, rec2
+    print("OK dispatch single-signature pin")
+
+    # epochized lanes: param-sharded mesh across membership migrations
+    topo = get_topology("robust_tree", 6)
+    sc = get_scenario("churn", 6)
+    traces = [sc.realize_epochs(topo, 60, seed=s) for s in range(2)]
+    egfn = quad_grad(6, p, 1)
+    eref, _ = run_sweep_epochs(traces, egfn, jnp.zeros(p), 0.01,
+                               seeds=[7, 9])
+    jax.block_until_ready([s.x for s in eref])
+    egot, _ = run_sweep_epochs(traces, egfn, jnp.zeros(p), 0.01,
+                               seeds=[7, 9],
+                               mesh=make_sweep_mesh(lanes=1,
+                                                    param_shards=4))
+    jax.block_until_ready([s.x for s in egot])
+    assert_lanes_close(eref, egot, "epochs mesh (1,4)")
+    print("OK epochs mesh-vs-unsharded (1,4)")
+
+
+if __name__ == "__main__":
+    main()

@@ -75,7 +75,7 @@ def _fleet_setup(seed=0, n=N):
 # ------------------------------------------------------------------ #
 def test_code_catalog_complete():
     assert sorted(CODES) == [f"RF10{i}" for i in range(1, 7)] \
-        + [f"RF20{i}" for i in range(1, 6)]
+        + [f"RF20{i}" for i in range(1, 7)]
     for info in CODES.values():
         assert info.owner and info.title and info.invariant
         assert info.motivation  # every code cites the bug that earned it
@@ -269,6 +269,55 @@ def test_rf205_dispatch_cache_churn():
         dispatch.lookup(("k",), lambda: (lambda: None))()
 
     assert jaxlint.audit_dispatch(steady, subject="m") == []
+
+
+def test_rf206_state_sized_collective_in_mesh_body():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis import jaxlint
+    from repro.core.runtime_sharded import _shard_map
+
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    nodes = jnp.zeros((1, 10, 4, 8), jnp.float32)   # (D, S_loc*n, 4, p)
+    threshold = 10 * 4 * 8 * 4                       # full-width bytes
+
+    # MUTATION: the "accidentally replicated" body — all_gather the
+    # whole packed node state over the param axis before using it
+    def bad(st):
+        full = jax.lax.all_gather(st[0], "model", axis=2, tiled=True)
+        return (full.sum(2) * 2.0)[None]
+
+    spec = P("data", None, None, "model")
+    cj = jax.make_jaxpr(_shard_map(
+        bad, mesh, (spec,), P("data", None, None),
+        ("data", "model")))(nodes)
+    diags = jaxlint.audit_mesh_collectives(
+        cj, subject="m", state_bytes_threshold=threshold)
+    assert codes(diags) == ["RF206"]
+    assert diags[0].data["primitive"] == "all_gather"
+
+    # the designed flow — gather ONE of the four node slots (the mixed
+    # iterates, threshold/4 bytes) — stays below the line
+    def good(st):
+        x = jax.lax.all_gather(st[0, :, 0], "model", axis=1, tiled=True)
+        return (st * x.sum())
+
+    cj = jax.make_jaxpr(_shard_map(
+        good, mesh, (spec,), spec, ("data", "model")))(nodes)
+    assert jaxlint.audit_mesh_collectives(
+        cj, subject="m", state_bytes_threshold=threshold) == []
+
+    # a state-sized psum is replication traffic too, all_gather or not
+    def psum_bad(st):
+        return st + jax.lax.psum(st, "model")
+
+    cj = jax.make_jaxpr(_shard_map(
+        psum_bad, mesh, (spec,), spec, ("data", "model")))(nodes)
+    diags = jaxlint.audit_mesh_collectives(
+        cj, subject="m", state_bytes_threshold=threshold)
+    assert codes(diags) == ["RF206"]
+    assert diags[0].data["primitive"] == "psum"
 
 
 # ------------------------------------------------------------------ #

@@ -188,3 +188,34 @@ def test_gate_structural_requires_dynamic_rows(tmp_path):
     other = [_row("sim", "fast", 1.0)]
     base2 = _write_baseline(tmp_path, [_row("sim", "fast", 1.0)])
     assert bench_run._compare(other, base2, 0.25, structural=True) == []
+
+
+def test_gate_structural_requires_mesh_scaling_rows(tmp_path):
+    """--structural requires the mesh-mapped production-scale rows:
+    scaling/n63..n255 + lm100m/* when the scaling suite ran, and
+    sweep/fleet_sharded_* when the sweep suite ran."""
+    base = _write_baseline(tmp_path, [_row("scaling", "scaling/n3", 10.0)])
+    records = [_row("scaling", "scaling/n3", 10.0),
+               _row("scaling", "scaling/n63", 20.0, "devices=1")]
+    probs = bench_run._compare(records, base, 0.25, structural=True)
+    assert sorted(p["name"] for p in probs
+                  if p["problem"] == "required-missing") == \
+        ["lm100m/", "scaling/n127", "scaling/n255"]
+    records += [_row("scaling", "scaling/n127", 20.0),
+                _row("scaling", "scaling/n255", 20.0),
+                _row("scaling", "lm100m/wavefront_mesh", 9e6,
+                     "p=134217728")]
+    probs = bench_run._compare(records, base, 0.25, structural=True)
+    assert not any(p["problem"] == "required-missing" for p in probs)
+
+    base_sw = _write_baseline(tmp_path, [
+        _row("sweep", "sweep/fleet_n7_S8", 5.0)])
+    recs = [_row("sweep", "sweep/fleet_n7_S8", 5.0)]
+    probs = bench_run._compare(recs, base_sw, 0.25, structural=True)
+    assert [p["name"] for p in probs
+            if p["problem"] == "required-missing"] == \
+        ["sweep/fleet_sharded_"]
+    recs += [_row("sweep", "sweep/fleet_sharded_d1", 5.0,
+                  "speedup_vs_d1=1.00x")]
+    probs = bench_run._compare(recs, base_sw, 0.25, structural=True)
+    assert not any(p["problem"] == "required-missing" for p in probs)

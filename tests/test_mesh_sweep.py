@@ -1,0 +1,105 @@
+"""Mesh-mapped fleet sweep: single-device equivalence, argument
+validation, shard-aware block padding, and the forced-4-device
+subprocess matrix (lane/param mesh factorizations, dispatch pin,
+epochized migration equivalence).
+
+The multi-device check runs in a subprocess so the forced host devices
+don't leak into this process's jax (tests must see 1 device).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scenario import get_scenario
+from repro.core.simulator import run_sweep, run_sweep_epochs
+from repro.core.topology import get_topology
+from repro.kernels.rfast_update.grid import block_pad_width
+from repro.kernels.rfast_update.kernel import BLK_R, LANE
+from repro.launch.mesh import make_sweep_mesh
+
+
+def _quad(n, p, seed=0):
+    A = jnp.asarray(np.random.default_rng(seed).normal(size=(n, p)),
+                    jnp.float32)
+    return lambda i, x, key: A[i] * x + 0.01 * jax.random.normal(
+        key, x.shape)
+
+
+def _sweep_setup(n=5, K=20, S=3, p=6):
+    topo = get_topology("binary_tree", n)
+    sc = get_scenario("uniform", n)
+    scheds = [sc.realize(topo, K, seed=s).schedule for s in range(S)]
+    return topo, scheds, _quad(n, p), jnp.zeros(p), [3, 5, 8]
+
+
+def test_block_pad_width_shards():
+    per = BLK_R * LANE
+    assert block_pad_width(per) == per
+    assert block_pad_width(per + 1) == 2 * per
+    # sharded: per-device slice still tiles into whole blocks
+    for p, m in [(per, 2), (per + 1, 4), (3 * per + 7, 8), (1, 3)]:
+        w = block_pad_width(p, m)
+        assert w >= p and w % m == 0 and (w // m) % per == 0
+    assert block_pad_width(per, 1) == block_pad_width(per)
+
+
+def test_trivial_mesh_matches_unsharded():
+    topo, scheds, gfn, x0, seeds = _sweep_setup()
+    ref, _ = run_sweep(topo, scheds, gfn, x0, 0.01, seeds=seeds)
+    mesh = make_sweep_mesh()        # (1, 1) on the single CI device
+    got, _ = run_sweep(topo, scheds, gfn, x0, 0.01, seeds=seeds,
+                       mesh=mesh)
+    for a, b in zip(ref, got):
+        for f in ("x", "v", "z", "g_prev", "rho", "rho_buf"):
+            np.testing.assert_allclose(getattr(a, f), getattr(b, f),
+                                       rtol=2e-5, atol=2e-5, err_msg=f)
+
+
+def test_mesh_validation():
+    topo, scheds, gfn, x0, seeds = _sweep_setup()
+    bad = make_sweep_mesh(lane_axis="rows", param_axis="cols")
+    with pytest.raises(ValueError, match="lane axis"):
+        run_sweep(topo, scheds, gfn, x0, 0.01, seeds=seeds, mesh=bad)
+    with pytest.raises(ValueError, match="devices"):
+        make_sweep_mesh(lanes=len(jax.devices()) + 1)
+    with pytest.raises(ValueError, match="param_shards"):
+        make_sweep_mesh(param_shards=0)
+
+
+def test_sweep_epochs_rejects_lane_parallel_mesh():
+    topo = get_topology("robust_tree", 6)
+    traces = [get_scenario("churn", 6).realize_epochs(topo, 40, seed=0)]
+    mesh = make_sweep_mesh(lanes=1)
+    # size-1 lane axis is the only legal layout here; fabricate a >1
+    # lane axis only when the host exposes enough devices
+    if len(jax.devices()) > 1:
+        with pytest.raises(ValueError, match="parameter axis only"):
+            run_sweep_epochs(traces, _quad(6, 4), jnp.zeros(4), 0.01,
+                             mesh=make_sweep_mesh(lanes=2))
+    got, _ = run_sweep_epochs(traces, _quad(6, 4), jnp.zeros(4), 0.01,
+                              mesh=mesh)
+    ref, _ = run_sweep_epochs(traces, _quad(6, 4), jnp.zeros(4), 0.01)
+    np.testing.assert_allclose(ref[0].x, got[0].x, rtol=2e-5, atol=2e-5)
+
+
+def test_mesh_sweep_equivalence_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.abspath("src")
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join("tests", "helpers", "mesh_sweep_equiv.py")],
+        env=env, capture_output=True, text=True, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    for marker in ("OK mesh-vs-unsharded (4,1)",
+                   "OK mesh-vs-unsharded (2,2)",
+                   "OK mesh-vs-unsharded (1,4)",
+                   "OK dispatch single-signature pin",
+                   "OK epochs mesh-vs-unsharded (1,4)"):
+        assert marker in r.stdout, r.stdout[-2000:]
