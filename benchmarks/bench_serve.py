@@ -1,0 +1,137 @@
+"""Serving benchmark: continuous-batching throughput, tail latency, and
+tail latency THROUGH a live weight swap.
+
+The full async loop in one bench: ``launch/train.py --publish-dir``
+trains a reduced LM under the straggler scenario and publishes a
+checkpoint per chunk; the serving engine then replays the published
+sequence — it starts on the FIRST checkpoint and the later ones are
+re-published mid-run at scripted step counts, so the engine's poll/flip
+path runs under live Zipfian traffic.  Percentiles are over per-step
+engine latency (admissions + one fused decode for all B slots), which is
+what a swap could stall; ``swap_p99_us`` is the same percentile
+restricted to swap-affected steps (the manifest-poll/npz-load step and
+the flip step), and the committed gate holds it within 2x ``p99_us``.
+
+``staleness_vs_loss`` is the correctness row (nan us by design): for
+every checkpoint that answered requests, the mean checkpoint age at
+answer time and the eval loss of those weights on the training
+objective — later checkpoints must serve strictly lower loss.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+
+def run(quick: bool = False, seed: int = 0) -> list[str]:
+    import jax
+
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    from repro.configs import get_config
+    from repro.core.paramvec import ravel
+    from repro.data.objectives import make_lm_problem
+    from repro.launch import train
+    from repro.models.transformer import init_params
+    from repro.serve import (ServeEngine, Scheduler, WeightStore,
+                             cache as serve_cache, make_workload)
+    from .common import csv_row
+
+    arch, nodes, seq = "llama3-8b", 3, 16
+    steps = 9 if quick else 18
+    n_requests = 48 if quick else 160
+    B = 8
+
+    pub = tempfile.mkdtemp(prefix="bench_serve_pub_")
+    res = train.main(["--arch", arch, "--reduced", "--nodes", str(nodes),
+                     "--steps", str(steps), "--batch-per-node", "2",
+                      "--seq", str(seq), "--scenario", "straggler",
+                      "--log-every", str(max(1, steps // 3)),
+                      "--seed", str(seed), "--publish-dir", pub])
+    published = res["published"]
+    cfg = get_config(arch).reduced()
+    template = init_params(cfg, jax.random.PRNGKey(seed))
+    trees = {k: load_checkpoint(pub, template, step=k) for k in published}
+
+    # serve dir replays the published sequence: checkpoint 0 up front,
+    # the rest re-published at scripted engine steps below
+    serve_dir = tempfile.mkdtemp(prefix="bench_serve_live_")
+    save_checkpoint(serve_dir, published[0], trees[published[0]])
+
+    store = WeightStore(jax.device_put(trees[published[0]]),
+                        step=published[0])
+    serve_cache.clear()
+    eng = ServeEngine(cfg, store, batch=B, max_len=64,
+                      buckets=(4, 8, 16), poll_every=4,
+                      ckpt_dir=serve_dir)
+
+    warm = make_workload(3 * B, vocab=cfg.vocab, max_prompt=16, max_gen=4,
+                         seed=seed + 1)
+    eng.run(warm)
+    eng.step_records.clear()
+    warm_stats = dict(serve_cache.stats())
+
+    reqs = make_workload(n_requests, vocab=cfg.vocab, max_prompt=16,
+                         max_gen=8, rate_rps=0.0, s=1.2, seed=seed + 2)
+    est_steps = max(3, sum(r.gen for r in reqs) // B)
+    triggers = {max(1, est_steps // 3): published[1]} if len(published) > 1 \
+        else {}
+    if len(published) > 2:
+        triggers[max(2, 2 * est_steps // 3)] = published[2]
+
+    sched = Scheduler(reqs)
+    import time
+    t0 = time.perf_counter()
+    fired = set()
+    while len(sched) or eng.in_flight or store.staged:
+        for trig, k in triggers.items():
+            if eng._step >= trig and k not in fired:
+                save_checkpoint(serve_dir, k, trees[k])
+                fired.add(k)
+        eng.step(sched)
+    wall = time.perf_counter() - t0
+
+    done = [r for r in reqs if r.done]
+    step_us = [r["us"] for r in eng.step_records]
+    swap_us = [r["us"] for r in eng.step_records if r["swap"]]
+    p50 = float(np.percentile(step_us, 50))
+    p99 = float(np.percentile(step_us, 99))
+    swap_p99 = float(np.percentile(swap_us, 99)) if swap_us else p50
+    rps = len(done) / wall
+    end_stats = dict(serve_cache.stats())
+    steady = (end_stats["misses"] == warm_stats["misses"])
+
+    # eval loss of each serving checkpoint on the training objective,
+    # paired with the mean checkpoint age at answer time
+    prob = make_lm_problem(cfg, nodes, batch_per_node=2, seq_len=seq,
+                           seed=seed)
+    pairs = []
+    for k in sorted({r.weights_step for r in done}):
+        served = [r for r in done if r.weights_step == k]
+        age = float(np.mean([r.weights_age_s for r in served]))
+        loss = float(prob.mean_loss(ravel(prob.spec, trees[k])))
+        pairs.append((k, age, loss, len(served)))
+
+    rows = [
+        csv_row("serve/reqs_per_s", 1e6 / rps,
+                f"rps={rps:.2f};served={len(done)}/{len(reqs)};B={B};"
+                f"steady_state={steady};entries={end_stats['entries']}"),
+        csv_row("serve/p50_us", p50, f"steps={len(step_us)}"),
+        csv_row("serve/p99_us", p99, f"steps={len(step_us)}"),
+        csv_row("serve/swap_p99_us", swap_p99,
+                f"swap_steps={len(swap_us)};swaps={len(store.swaps)};"
+                f"ratio_vs_p99={swap_p99 / p99:.2f}"),
+        csv_row("serve/staleness_vs_loss", float("nan"),
+                "|".join(f"step{k}:age_s={a:.3f}:loss={l:.4f}:reqs={m}"
+                         for k, a, l, m in pairs)),
+    ]
+    return rows
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("\n".join(run(quick=args.quick, seed=args.seed)))

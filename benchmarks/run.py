@@ -40,7 +40,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset: topologies,scaling,"
                          "straggler,packet_loss,heterogeneity,kernels,"
-                         "showdown,sweep")
+                         "showdown,sweep,serve")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--impl", default="",
                     help="protocol backend for the kernels-suite round "
@@ -93,8 +93,8 @@ def main() -> None:
     from repro.core.protocol import IMPLS
 
     from . import (bench_heterogeneity, bench_kernels, bench_packet_loss,
-                   bench_scaling, bench_showdown, bench_straggler,
-                   bench_sweep, bench_topologies)
+                   bench_scaling, bench_serve, bench_showdown,
+                   bench_straggler, bench_sweep, bench_topologies)
 
     if args.impl and args.impl not in IMPLS:
         ap.error(f"--impl must be one of {IMPLS}, got {args.impl!r}")
@@ -122,6 +122,7 @@ def main() -> None:
         + bench_showdown.run_lm(rounds=40 if args.quick else 120),
         "sweep": lambda: bench_sweep.run(
             K=1200 if args.quick else 3000),
+        "serve": lambda: bench_serve.run(quick=args.quick),
     }
     only = [s for s in args.only.split(",") if s]
     meta = {"quick": bool(args.quick), "impl": args.impl or "both",
@@ -218,15 +219,19 @@ def _perf_gate(records: list[dict], baseline_path: str,
 # robustness families (epochized root failover incl. the frozen-stall
 # control row, and churn/regional failures), the mesh-mapped scaling
 # rows past the single-device ceiling (n63..n255 + the 100M-parameter
-# LM through the sharded wavefront engine), and the lane-throughput
-# sharding row.  The structural gate requires them even against
-# baselines that predate the rows, so a future PR cannot silently drop
-# the failover scenarios or the production-scale paths.
+# LM through the sharded wavefront engine), the lane-throughput sharding
+# row, and the serving-engine rows (throughput, tail latency, tail
+# latency through a live weight swap, and the staleness/loss pairing).
+# The structural gate requires them even against baselines that predate
+# the rows, so a future PR cannot silently drop the failover scenarios,
+# the production-scale paths, or the serving loop.
 REQUIRED_PREFIXES = {
     "showdown": ("showdown/root_failover/", "churn/"),
     "scaling": ("scaling/n63", "scaling/n127", "scaling/n255",
                 "lm100m/"),
     "sweep": ("sweep/fleet_sharded_",),
+    "serve": ("serve/reqs_per_s", "serve/p50_us", "serve/p99_us",
+              "serve/swap_p99_us", "serve/staleness_vs_loss"),
 }
 
 

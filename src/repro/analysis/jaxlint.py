@@ -23,7 +23,8 @@ import numpy as np
 from .diagnostics import Diagnostic
 
 __all__ = ["iter_eqns", "audit_jaxpr", "audit_donation",
-           "audit_dispatch", "audit_mesh_collectives", "audit_engines"]
+           "audit_dispatch", "audit_serve_cache",
+           "audit_mesh_collectives", "audit_engines"]
 
 # host round-trip primitives (RF201) and loop primitives they must not
 # appear inside
@@ -139,25 +140,31 @@ def audit_donation(fn, args, donate_argnums, *, subject
     return diags
 
 
-def audit_dispatch(run_once, *, subject, expect_entries=1, repeats=2
-                   ) -> list[Diagnostic]:
-    """RF205: ``run_once()`` must settle the dispatch cache at
-    ``expect_entries`` entries, and replays must be pure cache hits."""
-    from ..kernels.rfast_update import dispatch
-    dispatch.clear()
+def audit_dispatch(run_once, *, subject, expect_entries=1, repeats=2,
+                   cache=None) -> list[Diagnostic]:
+    """RF205: ``run_once()`` must settle the compiled-plan cache at
+    ``expect_entries`` entries, and replays must be pure cache hits.
+
+    ``cache`` is any module/object with the ``stats()``/``clear()``
+    contract — the commit-grid dispatch cache by default, or
+    ``repro.serve.cache`` (the serving executables) via
+    :func:`audit_serve_cache`."""
+    if cache is None:
+        from ..kernels.rfast_update import dispatch as cache
+    cache.clear()
     diags = []
     try:
         run_once()
-        first = dict(dispatch.stats())
+        first = dict(cache.stats())
         if first["entries"] > expect_entries:
             diags.append(Diagnostic(
                 "RF205", subject,
-                f"first run created {first['entries']} dispatch entries "
+                f"first run created {first['entries']} cache entries "
                 f"(expected <= {expect_entries}): the cache key varies "
                 "within one fleet shape", dict(first)))
         for _ in range(max(0, repeats - 1)):
             run_once()
-        after = dict(dispatch.stats())
+        after = dict(cache.stats())
         if after["misses"] > first["misses"]:
             diags.append(Diagnostic(
                 "RF205", subject,
@@ -165,8 +172,52 @@ def audit_dispatch(run_once, *, subject, expect_entries=1, repeats=2
                 f"{after['misses'] - first['misses']} more time(s) — "
                 "recompilation in steady state", dict(after)))
     finally:
-        dispatch.clear()
+        cache.clear()
     return diags
+
+
+def audit_serve_cache(*, seed=0, buckets=(4, 8)) -> tuple[list[Diagnostic],
+                                                          list[str]]:
+    """RF205 over the SERVING executable cache (``repro.serve.cache``).
+
+    Runs a tiny engine over a fixed mixed-length workload — prompts
+    spanning every configured bucket — and requires the cache to settle
+    at exactly ``1 + len(buckets)`` entries (one fused decode executable
+    plus one prefill executable per prompt-length bucket) with replays
+    hitting only.  Passing ``buckets=None`` disables bucketing, so every
+    distinct prompt length builds its own executable and the audit
+    fires — the mutation ``tests/test_analysis.py`` pins.
+    """
+    from ..models.config import ModelConfig
+    from ..models.transformer import init_params
+    from ..serve import Request, ServeEngine, WeightStore
+    from ..serve import cache as serve_cache
+
+    cfg = ModelConfig(name="serve-audit", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=64)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    lengths = [1, 2, 3, 5, 7, 8]          # spans both default buckets
+    max_b = max(buckets) if buckets else max(lengths)
+    lengths = [min(l, max_b) for l in lengths]
+
+    def run_once():
+        eng = ServeEngine(cfg, WeightStore(params), batch=2, max_len=16,
+                          buckets=buckets)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab, size=l,
+                                            ).astype(np.int32),
+                        gen=2, arrive_s=0.0)
+                for i, l in enumerate(lengths)]
+        eng.run(reqs)
+
+    expect = 1 + (len(buckets) if buckets else 0)
+    if buckets is None:
+        expect = 1 + 1          # the tightest defensible floor: decode
+        #                         + ONE prefill; every extra length fires
+    diags = audit_dispatch(run_once, subject="serve_engine[cache]",
+                           expect_entries=expect, cache=serve_cache)
+    return diags, ["serve_engine[cache]"]
 
 
 def audit_mesh_collectives(closed, *, subject, state_bytes_threshold

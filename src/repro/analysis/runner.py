@@ -152,6 +152,10 @@ def run_all(*, n=7, K=96, K_epochs=1200, seeds=(0,), quick=False,
         say("jaxlint: tracing engines")
         d, audited = jaxlint.audit_engines(seed=min(seeds, default=0))
         diags += d
+        say("jaxlint: serving executable cache")
+        d, a = jaxlint.audit_serve_cache(seed=min(seeds, default=0))
+        diags += d
+        audited += a
     return {
         "version": 1,
         "tool": "repro.analysis",

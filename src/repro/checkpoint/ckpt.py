@@ -1,7 +1,17 @@
 """npz-based pytree checkpointing with step metadata.
 
 Layout: ``<dir>/step_<N>.npz`` holding flattened leaves keyed by path, plus
-a ``_treedef`` json of the structure.  Atomic via tmp + rename.
+a ``_treedef`` json of the structure.  Every write is atomic (tmp file +
+``fsync`` + ``os.replace``), and each successful save also replaces a
+``LATEST.json`` manifest — the single pointer a polling reader (the
+serving :class:`~repro.serve.weights.WeightStore`) follows, so a reader
+can NEVER observe a torn checkpoint:
+
+* the npz only appears under its final name after its bytes are durable;
+* the manifest only points at a step whose npz replace already happened;
+* a partial/corrupt npz (a crashed foreign writer, a truncated copy)
+  is rejected by :func:`load_checkpoint` with a pointed error instead
+  of a deep numpy traceback.
 """
 from __future__ import annotations
 
@@ -9,12 +19,17 @@ import json
 import os
 import re
 import tempfile
+import time
+import zipfile
 from typing import Any
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "read_manifest", "MANIFEST"]
+
+MANIFEST = "LATEST.json"
 
 
 def _flatten_with_paths(tree: Any) -> dict[str, np.ndarray]:
@@ -26,26 +41,68 @@ def _flatten_with_paths(tree: Any) -> dict[str, np.ndarray]:
     return flat
 
 
+def _atomic_write(path: str, write_fn) -> None:
+    """Write via tmp file in the same dir + fsync + os.replace, so the
+    final name only ever names a complete file."""
+    d = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            write_fn(fh)
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten_with_paths(tree)
     treedef = jax.tree_util.tree_structure(tree)
     path = os.path.join(ckpt_dir, f"step_{step:010d}.npz")
-    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
-    os.close(fd)
-    try:
-        np.savez(tmp, _treedef=json.dumps(str(treedef)), **flat)
-        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
-    finally:
-        for t in (tmp, tmp + ".npz"):
-            if os.path.exists(t):
-                os.remove(t)
+    _atomic_write(path, lambda fh: np.savez(
+        fh, _treedef=json.dumps(str(treedef)), **flat))
+    manifest = {"step": int(step), "file": os.path.basename(path),
+                "time": time.time(), "leaves": len(flat)}
+    _atomic_write(os.path.join(ckpt_dir, MANIFEST),
+                  lambda fh: fh.write(
+                      (json.dumps(manifest) + "\n").encode()))
     return path
+
+
+def read_manifest(ckpt_dir: str) -> dict | None:
+    """The LATEST pointer: ``{"step", "file", "time", "leaves"}`` or
+    ``None`` when the dir has no (readable) manifest yet.  A manifest
+    pointing at a missing file is an error — the pointer is only ever
+    replaced AFTER its npz, so this means external tampering."""
+    path = os.path.join(ckpt_dir, MANIFEST)
+    try:
+        with open(path) as fh:
+            man = json.load(fh)
+    except FileNotFoundError:
+        return None
+    except (json.JSONDecodeError, OSError) as e:
+        raise ValueError(
+            f"unreadable checkpoint manifest {path}: {e} — manifests are "
+            "written atomically by save_checkpoint; a torn one means a "
+            "foreign writer bypassed it") from e
+    target = os.path.join(ckpt_dir, man["file"])
+    if not os.path.exists(target):
+        raise ValueError(
+            f"manifest {path} points at missing {man['file']} — "
+            "save_checkpoint replaces the npz before the pointer, so "
+            "the checkpoint file was removed out from under the reader")
+    return man
 
 
 def latest_step(ckpt_dir: str) -> int | None:
     if not os.path.isdir(ckpt_dir):
         return None
+    man = read_manifest(ckpt_dir)
+    if man is not None:
+        return int(man["step"])
     steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
              if (m := re.match(r"step_(\d+)\.npz$", f))]
     return max(steps) if steps else None
@@ -58,8 +115,19 @@ def load_checkpoint(ckpt_dir: str, like: Any, step: int | None = None) -> Any:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:010d}.npz")
-    with np.load(path, allow_pickle=False) as data:
-        flat = {k: data[k] for k in data.files if k != "_treedef"}
+    try:
+        with np.load(path, allow_pickle=False) as data:
+            if "_treedef" not in data.files:
+                raise ValueError("no _treedef record")
+            flat = {k: data[k] for k in data.files if k != "_treedef"}
+    except (zipfile.BadZipFile, EOFError, OSError, ValueError) as e:
+        if isinstance(e, FileNotFoundError):
+            raise
+        raise ValueError(
+            f"torn or partial checkpoint {path}: {e} — complete "
+            "checkpoints only ever appear via save_checkpoint's "
+            "tmp+fsync+rename, so this file was written by something "
+            "else (or truncated in transit); refusing to load it") from e
     ref = _flatten_with_paths(like)
     if set(ref) != set(flat):
         missing = set(ref) ^ set(flat)

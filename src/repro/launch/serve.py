@@ -1,75 +1,108 @@
-"""Serving driver: batched autoregressive decode with a KV cache.
+"""Serving driver: continuous-batching decode over hot-swappable weights.
+
+Thin CLI over :mod:`repro.serve` — a fixed-shape ``(B, max_len)`` decode
+batch with slot recycling, a shape-keyed executable cache (zero compiles
+at steady state) and a double-buffered :class:`WeightStore` that polls a
+``--publish-dir`` written by ``launch/train.py`` and flips weights
+between decode steps.  DESIGN.md §14 has the architecture.
 
     PYTHONPATH=src python -m repro.launch.serve \
-        --arch llama3-8b --reduced --batch 4 --prompt-len 16 --gen 32
+        --arch llama3-8b --reduced --batch 4 --requests 64 --rate 50
+
+RNG discipline: the seed key is split ONCE per consumer (parameter init
+vs traffic), matching ``core/simulator.py``'s per-event keys — the
+previous one-shot script reused a single key for ``init_params``, the
+frontend tensor AND the prompts, silently correlating the three streams.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import ckpt
 from repro.configs import ARCHS, get_config
-from repro.models.transformer import (decode_step, init_params,
-                                      prefill_cache)
+from repro.models.transformer import init_params
+from repro.serve import (DEFAULT_BUCKETS, ServeEngine, WeightStore,
+                         cache as serve_cache, make_workload)
 
 
-def main() -> None:
+def _percentile(xs: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b", choices=ARCHS)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots B (fixed batch shape)")
+    ap.add_argument("--max-len", type=int, default=64,
+                    help="KV ring capacity bound per slot")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-prompt", type=int, default=16)
+    ap.add_argument("--max-gen", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop arrival rate (req/s); 0 = closed "
+                         "backlog (all requests queued at t=0)")
+    ap.add_argument("--zipf-s", type=float, default=1.2)
+    ap.add_argument("--buckets", default=",".join(map(str, DEFAULT_BUCKETS)),
+                    help="comma-separated prompt-length buckets (one "
+                         "prefill executable each)")
+    ap.add_argument("--publish-dir", default="",
+                    help="poll this checkpoint dir (written by train.py "
+                         "--publish-dir) and hot-swap between decode steps")
+    ap.add_argument("--poll-every", type=int, default=16,
+                    help="poll the manifest every N engine steps")
+    ap.add_argument("--swap-mode", default="drain",
+                    choices=("drain", "immediate"))
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
-    front = None
-    if cfg.frontend:
-        front = jax.random.normal(
-            key, (args.batch, cfg.frontend_seq,
-                  cfg.frontend_dim or cfg.d_model), jnp.float32)
 
-    max_len = args.prompt_len + args.gen
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab)
+    # one stream per consumer — never reuse a key across draws
+    k_init, k_traffic = jax.random.split(jax.random.PRNGKey(args.seed))
+    params = init_params(cfg, k_init)
+    store = WeightStore(params)
+    if args.publish_dir:
+        man = ckpt.read_manifest(args.publish_dir)
+        if man is not None and store.poll(args.publish_dir):
+            store.flip()
+            print(f"loaded published step {store.step} "
+                  f"from {args.publish_dir}")
 
-    t0 = time.perf_counter()
-    # batched prefill: ONE forward fills the cache (models/transformer.py)
-    cache, logits = jax.jit(
-        lambda p, t, f: prefill_cache(cfg, p, t, max_len, frontend=f),
-        static_argnames=())(params, prompts, front)
-    jax.block_until_ready(logits)
-    t1 = time.perf_counter()
-    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    buckets = tuple(int(b) for b in args.buckets.split(",") if b)
+    engine = ServeEngine(
+        cfg, store, batch=args.batch, max_len=args.max_len,
+        buckets=buckets, swap_mode=args.swap_mode,
+        poll_every=args.poll_every if args.publish_dir else 0,
+        ckpt_dir=args.publish_dir or None)
 
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    out = [tok]
-    for i in range(args.gen - 1):
-        logits, cache = step(params, cache, tok)
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits[:, 0] / args.temperature)[:, None]
-            tok = tok.astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tok)
-    toks = np.asarray(jnp.concatenate(out, axis=1))
-    t2 = time.perf_counter()
-    print(f"arch={cfg.name} prefill {args.prompt_len} tok: {t1-t0:.2f}s; "
-          f"decode {args.gen} tok x {args.batch} seq: {t2-t1:.2f}s "
-          f"({args.gen*args.batch/(t2-t1):.1f} tok/s)")
-    print("sample tokens:", toks[0, :16])
+    reqs = make_workload(
+        args.requests, vocab=cfg.vocab, max_prompt=args.max_prompt,
+        max_gen=args.max_gen, rate_rps=args.rate, s=args.zipf_s,
+        seed=int(jax.random.randint(k_traffic, (), 0, 2**31 - 1)))
+
+    report = engine.run(reqs)
+    step_us = [r["us"] for r in report["steps"]]
+    p50, p99 = _percentile(step_us, 50), _percentile(step_us, 99)
+    print(f"arch={cfg.name} B={args.batch} C={engine.C} "
+          f"buckets={buckets} swap_mode={args.swap_mode}")
+    print(f"served {len([r for r in reqs if r.done])}/{len(reqs)} req "
+          f"({report['tokens']} tok) in {report['wall_s']:.2f}s "
+          f"-> {report['reqs_per_s']:.1f} req/s")
+    print(f"step p50 {p50:.0f}us p99 {p99:.0f}us; "
+          f"swaps={len(report['swaps'])}; cache={report['cache']}")
+    stats = serve_cache.stats()
+    return {"mode": "serve", "arch": cfg.name,
+            "served": sum(r.done for r in reqs),
+            "reqs_per_s": report["reqs_per_s"], "p50_us": p50,
+            "p99_us": p99, "swaps": len(report["swaps"]),
+            "cache": stats, "report": report}
 
 
 if __name__ == "__main__":

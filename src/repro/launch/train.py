@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import load_checkpoint, latest_step, save_checkpoint
+from repro.core.paramvec import unravel
 from repro.metrics import MetricsLogger, StepTimer
 from repro.configs import ARCHS, get_config
 from repro.core.protocol import IMPLS
@@ -86,6 +87,13 @@ def main(argv=None) -> dict:
                          "before the backend initializes (the CPU dev "
                          "loop for --param-shards)")
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--publish-dir", default="",
+                    help="publish SERVING checkpoints (the unraveled "
+                         "model pytree of the consensus average x̄, not "
+                         "the packed protocol state) at every chunk "
+                         "boundary through checkpoint/ckpt.py's atomic "
+                         "npz+manifest protocol — the feed that "
+                         "launch/serve.py polls and hot-swaps from")
     ap.add_argument("--metrics", default="", help="JSONL metrics path")
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=10)
@@ -110,6 +118,16 @@ def main(argv=None) -> dict:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.publish_dir:
+        if not args.scenario:
+            ap.error("--publish-dir publishes the async consensus "
+                     "average at chunk boundaries; the synchronous "
+                     "rounds have no flat-parameter chunk hook (pass "
+                     "--scenario)")
+        if args.param_shards > 1:
+            ap.error("--publish-dir rides the wavefront chunk callback, "
+                     "which the mesh-mapped run_sweep path does not "
+                     "expose; drop --param-shards or --publish-dir")
     if args.scenario:
         if args.loss_prob:
             ap.error("--loss-prob models loss in the synchronous rounds; "
@@ -268,6 +286,8 @@ def _train_async(args, cfg) -> dict:
         l = float(prob.mean_loss(state.x.mean(0)))
         return {"loss": l, "t": t}
 
+    published: list[int] = []
+
     def chunk_cb(state, k):
         timer.tick()
         if logger:
@@ -275,6 +295,12 @@ def _train_async(args, cfg) -> dict:
         if args.ckpt and (k >= K
                           or (k // eval_every) % save_every_chunks == 0):
             save_checkpoint(args.ckpt, k, state)
+        if args.publish_dir:
+            # serving checkpoint: the consensus average x̄ unraveled back
+            # to the model pytree — what launch/serve.py hot-swaps in
+            save_checkpoint(args.publish_dir, k,
+                            unravel(prob.spec, state.x.mean(0)))
+            published.append(k)
 
     k0 = int(state0.k) if state0 is not None else 0
     def eval_and_log(state, t):
@@ -323,7 +349,7 @@ def _train_async(args, cfg) -> dict:
     else:
         print("done (schedule already complete)")
     return {"mode": "async", "scenario": args.scenario,
-            "losses": losses, "events": K,
+            "losses": losses, "events": K, "published": published,
             "vtime": float(sched.times[-1]), "send_ok": delivered}
 
 
@@ -366,6 +392,8 @@ def _train_async_dynamic(args, cfg, prob, topo, sc, K) -> dict:
 
     # run_epochs calls eval_fn then chunk_cb with the same global event
     # count, so the print lands here where k is known
+    published: list[int] = []
+
     def chunk_cb(state, k):
         timer.tick()
         dt = time.perf_counter() - t0
@@ -373,6 +401,10 @@ def _train_async_dynamic(args, cfg, prob, topo, sc, K) -> dict:
               f"({dt:.1f}s)", flush=True)
         if logger:
             logger.log(k, loss=losses[-1], sps=timer.steps_per_sec)
+        if args.publish_dir:
+            save_checkpoint(args.publish_dir, k,
+                            unravel(prob.spec, state.x.mean(0)))
+            published.append(k)
 
     state, metrics = run_epochs(
         et, prob, jnp.tile(x0[None], (n, 1)), args.gamma,
@@ -385,7 +417,7 @@ def _train_async_dynamic(args, cfg, prob, topo, sc, K) -> dict:
           f"events, {len(et.epochs)} epochs ({vtime:.1f} vtime)")
     return {"mode": "async-dynamic", "scenario": args.scenario,
             "losses": losses, "events": K, "epochs": len(et.epochs),
-            "vtime": float(vtime)}
+            "published": published, "vtime": float(vtime)}
 
 
 if __name__ == "__main__":

@@ -21,7 +21,7 @@ from .layers import (dense_init, mlp_apply, mlp_init, norm_apply, norm_init,
 from .sharding import shard
 
 __all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
-           "prefill", "prefill_cache"]
+           "decode_step_slots", "prefill", "prefill_cache", "prefill_rows"]
 
 
 # ------------------------------------------------------------------ #
@@ -312,6 +312,123 @@ def decode_step(cfg: ModelConfig, params, cache, token, *, unroll=False):
     new_cache["slot_pos"] = slot_pos
     new_cache["layers"] = new_layer_caches
     return logits, new_cache
+
+
+def decode_step_slots(cfg: ModelConfig, params, cache, tokens, *,
+                      unroll=False):
+    """Continuous-batching decode: every batch slot advances its OWN
+    position.  Same cache layout as :func:`init_cache` except ``idx``
+    is ``(B,)`` and ``slot_pos`` is ``(B, C)`` — each slot is an
+    independent request at its own depth, so a finished slot can be
+    re-prefilled while its neighbours keep decoding.
+
+    Implemented as a vmap of the single-sequence :func:`decode_step`
+    over the slot axis (params broadcast, cache layers mapped on their
+    batch axis), so the per-slot math is *definitionally* the B=1
+    decode path.  tokens (B, 1) -> (logits (B, 1, V), new cache).
+    """
+    if cfg.enc_dec:
+        raise ValueError("decode_step_slots serves decoder-only archs; "
+                         f"{cfg.name} is enc-dec (cross caches have no "
+                         "per-slot position)")
+
+    def one(idx, slot_pos, layers):
+        return {"idx": idx, "slot_pos": slot_pos,
+                "layers": jax.tree.map(lambda a: a[:, None], layers)}
+
+    def step(idx, slot_pos, layers, tok):
+        logits, nc = decode_step(cfg, params, one(idx, slot_pos, layers),
+                                 tok[None], unroll=unroll)
+        return logits[0], nc["idx"], nc["slot_pos"], \
+            jax.tree.map(lambda a: a[:, 0], nc["layers"])
+
+    logits, idx, slot_pos, layers = jax.vmap(
+        step, in_axes=(0, 0, 1, 0), out_axes=(0, 0, 0, 1))(
+        cache["idx"], cache["slot_pos"], cache["layers"], tokens)
+    return logits, {"idx": idx, "slot_pos": slot_pos, "layers": layers}
+
+
+def prefill_rows(cfg: ModelConfig, params, tokens, true_len, capacity: int,
+                 dtype=jnp.float32):
+    """Bucketized prefill for ONE serving slot: tokens (B, Sb) are
+    right-padded to a bucket length and ``true_len`` (traced scalar,
+    1 <= true_len <= Sb) marks the valid prefix.
+
+    Causality makes the padding inert where it matters: position i's KV
+    row depends only on tokens <= i, so rows at positions < true_len are
+    bit-identical to an unpadded prefill, and the contaminated tail
+    (>= true_len) is never selected below.  Because ``true_len`` is
+    traced, every prompt length inside a bucket reuses ONE compiled
+    executable — the serving engine's cache is keyed by (arch, B, Sb,
+    C), never by the actual prompt length.
+
+    Returns ``(ring_layers, slot_pos (C,), logits (B, V))``:
+    ``ring_layers`` leaves are ``(L, B, C, ...)`` decode-cache rows
+    (the last min(true_len, C) valid positions at slots pos % C,
+    zeros elsewhere), ``slot_pos`` the per-slot absolute positions
+    (-1 = empty), and ``logits`` the next-token logits at position
+    true_len - 1.
+    """
+    if cfg.mixer != "attn":
+        raise ValueError(
+            f"prefill_rows requires an attention mixer; {cfg.name} is "
+            f"{cfg.mixer!r} — an SSM carry absorbs the pad tail, so "
+            "bucketized prefill cannot recover the true_len state")
+    if cfg.enc_dec or cfg.frontend:
+        raise ValueError("prefill_rows serves decoder-only text archs; "
+                         f"{cfg.name} has enc_dec/frontend stages")
+    x = params["embed"][tokens]
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    if not cfg.use_rope:
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+    x = shard(x, "batch", "seq", "embed")
+    C = capacity
+
+    def body(xc, lp):
+        h = norm_apply(cfg, lp["ln1"], xc)
+        if cfg.attention == "mla":
+            a, (c, kr) = attn.mla_apply(cfg, lp["attn"], h, positions,
+                                        window=cfg.attn_window,
+                                        return_kv=True)
+            kv = {"c": c, "kr": kr}
+        else:
+            a, (k, v) = attn.gqa_apply(cfg, lp["attn"], h, positions,
+                                       window=cfg.attn_window,
+                                       return_kv=True)
+            kv = {"k": k, "v": v}
+        xc = xc + a
+        if "mlp" in lp:
+            h2 = norm_apply(cfg, lp["ln2"], xc)
+            if cfg.moe_experts:
+                y2, _ = moe_mod.moe_apply(cfg, lp["mlp"], h2)
+            else:
+                y2 = mlp_apply(cfg, lp["mlp"], h2)
+            xc = xc + y2
+        return shard(xc, "batch", "seq", "embed"), kv
+
+    x, layer_kv = jax.lax.scan(body, x, params["layers"])
+    x = norm_apply(cfg, params["final_norm"], x)
+    last = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+    head = params.get("lm_head")
+    logits = (last @ head if head is not None
+              else last @ params["embed"].T)[:, 0]
+
+    # ring slot c holds the largest position p < true_len with
+    # p % C == c (and p > true_len-1-C): p_c = q - ((q - c) mod C),
+    # q = true_len - 1.  Out-of-range residues resolve to p_c < 0.
+    q = true_len - 1
+    p_c = q - ((q - jnp.arange(C, dtype=jnp.int32)) % C)
+    valid = p_c >= 0
+    slot_pos = jnp.where(valid, p_c, -1).astype(jnp.int32)
+
+    def ring(kv):
+        rows = jnp.take(kv, jnp.clip(p_c, 0, S - 1), axis=2)  # (L,B,C,...)
+        mask = valid.reshape((1, 1, C) + (1,) * (kv.ndim - 3))
+        return jnp.where(mask, rows, 0).astype(dtype)
+
+    ring_layers = {"attn": jax.tree.map(ring, layer_kv)}
+    return ring_layers, slot_pos, logits
 
 
 def prefill(cfg: ModelConfig, params, cache, tokens):

@@ -1,0 +1,58 @@
+"""Shape-keyed compiled-plan cache for the serving engine.
+
+The serving counterpart of ``kernels/rfast_update/dispatch.py`` — same
+contract (``lookup(key, build)`` + instrumented ``stats``/``clear``),
+different population: here the cached callables are jitted **decode and
+prefill executables**, keyed by
+
+    ("decode",  arch, B, C, dtype)
+    ("prefill", arch, B, C, Sb, dtype)
+
+where ``B`` is the fixed batch width, ``C`` the KV ring capacity and
+``Sb`` a *bucketized* prompt length (``engine.bucket_for``).  The true
+prompt length is a traced argument of the prefill executable, never part
+of the key, so every prompt inside a bucket — and every hot-swapped
+parameter set, which enters as a donated argument rather than a baked
+constant — resolves to the SAME executable.  Steady-state serving
+therefore performs ZERO compiles: ``misses`` counts distinct executables
+built since :func:`clear`, and the serving tests pin it with
+``assert_no_recompiles(cache=serve_cache)``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+__all__ = ["lookup", "stats", "clear"]
+
+_cache: dict[tuple, Callable] = {}
+_hits = 0
+_misses = 0
+
+
+def lookup(key: tuple, build: Callable[[], Callable]) -> Callable:
+    """Return the cached executable for ``key``, constructing it with
+    ``build()`` on the first request.  Counts a hit or a miss."""
+    global _hits, _misses
+    fn = _cache.get(key)
+    if fn is None:
+        _misses += 1
+        fn = build()
+        _cache[key] = fn
+    else:
+        _hits += 1
+    return fn
+
+
+def stats() -> dict:
+    """Current counters: ``{"hits", "misses", "entries"}``.  Misses count
+    distinct (arch, shape, bucket) executables built since the last
+    :func:`clear`; a steady-state serving loop must not grow them."""
+    return {"hits": _hits, "misses": _misses, "entries": len(_cache)}
+
+
+def clear() -> None:
+    """Drop every cached executable and zero the counters (test isolation)."""
+    global _hits, _misses
+    _cache.clear()
+    _hits = 0
+    _misses = 0

@@ -1,0 +1,94 @@
+"""Double-buffered parameter store with zero-recompile hot swap.
+
+The trainer (``launch/train.py --publish-dir``) publishes checkpoints at
+chunk boundaries through ``checkpoint/ckpt.py``'s atomic npz + manifest
+protocol.  The server side is this store:
+
+* :meth:`poll` reads ``LATEST.json``; when it names a step newer than
+  the active one, the checkpoint is loaded and ``device_put`` into the
+  **spare** buffer.  The active buffer — and any decode step currently
+  tracing over it — is untouched.
+* :meth:`flip` swaps the buffer references.  It is a plain Python
+  assignment the engine performs strictly *between* decode steps, so
+  the memory-ordering argument is trivial: a dispatched step captured
+  the old reference and completes on the old weights; every later step
+  reads the new one.  Nothing is mutated in place, nothing recompiles —
+  parameters are jit *arguments* with unchanged shapes/dtypes, so the
+  executable cache key is identical before and after the swap.
+
+The store records every swap (``swaps``) and exposes the provenance of
+the active weights (``step``, ``published_at``) so the engine can stamp
+each finished request with the checkpoint age at answer time — the
+staleness axis of ``serve/staleness_vs_loss``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from ..checkpoint import ckpt
+
+__all__ = ["WeightStore"]
+
+
+class WeightStore:
+    def __init__(self, params: Any, *, step: int = -1,
+                 published_at: float | None = None):
+        self._active = params
+        self._spare: Any = None
+        self._spare_meta: tuple[int, float] | None = None
+        self.step = int(step)
+        self.published_at = published_at
+        self.polls = 0
+        self.loads = 0
+        self.swaps: list[dict] = []
+
+    @property
+    def params(self) -> Any:
+        """The active buffer.  Engines must re-read this property each
+        step rather than caching the reference — that re-read IS the
+        acquire side of the swap."""
+        return self._active
+
+    @property
+    def staged(self) -> bool:
+        return self._spare_meta is not None
+
+    def offer(self, params: Any, step: int, published_at: float) -> None:
+        """Stage an in-memory parameter set into the spare buffer
+        (tests and in-process publishers; newer steps only)."""
+        if step <= self.step:
+            return
+        self._spare = params
+        self._spare_meta = (int(step), float(published_at))
+
+    def poll(self, ckpt_dir: str) -> bool:
+        """Check the manifest; load a newer checkpoint into the spare
+        buffer.  Returns True when something was staged.  The load is
+        synchronous (manifest read is ~free; the npz read happens only
+        on the step that discovers a new checkpoint)."""
+        self.polls += 1
+        man = ckpt.read_manifest(ckpt_dir)
+        if man is None or int(man["step"]) <= self.step:
+            return False
+        loaded = ckpt.load_checkpoint(ckpt_dir, self._active,
+                                      step=int(man["step"]))
+        self._spare = jax.device_put(loaded)
+        self._spare_meta = (int(man["step"]), float(man["time"]))
+        self.loads += 1
+        return True
+
+    def flip(self, *, at_step: int = -1) -> bool:
+        """Make the staged buffer active (reference swap, between decode
+        steps).  Returns True when a swap happened."""
+        if self._spare_meta is None:
+            return False
+        step, published_at = self._spare_meta
+        self._active, self._spare = self._spare, None
+        self._spare_meta = None
+        self.swaps.append({"engine_step": int(at_step),
+                           "from": self.step, "to": step})
+        self.step = step
+        self.published_at = published_at
+        return True

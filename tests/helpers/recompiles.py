@@ -66,24 +66,28 @@ def _jax_compile_listener(record: RecompileRecord):
 
 @contextlib.contextmanager
 def assert_no_recompiles(expect_entries: int = 1, *, fresh: bool = True,
-                         max_jax_compiles: int | None = None):
-    """Assert the block adds exactly ``expect_entries`` dispatch-cache
-    entries (RF205's runtime counterpart).
+                         max_jax_compiles: int | None = None, cache=None):
+    """Assert the block adds exactly ``expect_entries`` cache entries
+    (RF205's runtime counterpart).
 
-    ``fresh=True`` clears the cache first, so ``expect_entries`` counts
-    signatures built by the block itself; ``fresh=False`` measures
-    against the warm cache — ``expect_entries=0`` then asserts the block
-    rode existing launches only.  ``max_jax_compiles`` optionally bounds
-    backend-compile events too (skipped silently when the running JAX
-    exposes no monitoring hooks).
+    ``cache`` selects WHICH instrumented cache is audited: any module or
+    object with the ``stats()``/``clear()`` contract — the commit-grid
+    dispatch cache by default, ``repro.serve.cache`` for the serving
+    executables.  ``fresh=True`` clears it first, so ``expect_entries``
+    counts signatures built by the block itself; ``fresh=False``
+    measures against the warm cache — ``expect_entries=0`` then asserts
+    the block rode existing executables only.  ``max_jax_compiles``
+    optionally bounds backend-compile events too (skipped silently when
+    the running JAX exposes no monitoring hooks).
 
     Yields a :class:`RecompileRecord`; its fields hold the observed
     deltas after the block exits, so tests can make finer assertions
     (``rec.misses``, ``rec.hits``) on top of the entry check.
     """
+    cache = dispatch if cache is None else cache
     if fresh:
-        dispatch.clear()
-    base = dispatch.stats()
+        cache.clear()
+    base = cache.stats()
     rec = RecompileRecord()
     listener, remove = _jax_compile_listener(rec)
     rec.jax_hooked = listener is not None
@@ -92,12 +96,12 @@ def assert_no_recompiles(expect_entries: int = 1, *, fresh: bool = True,
     finally:
         if remove is not None:
             remove()
-    after = dispatch.stats()
+    after = cache.stats()
     rec.entries = after["entries"] - base["entries"]
     rec.misses = after["misses"] - base["misses"]
     rec.hits = after["hits"] - base["hits"]
     assert rec.entries == expect_entries, (
-        f"dispatch cache grew by {rec.entries} launch signature(s), "
+        f"cache grew by {rec.entries} signature(s), "
         f"expected {expect_entries}: {base} -> {after}")
     if max_jax_compiles is not None and rec.jax_hooked:
         assert rec.jax_compiles <= max_jax_compiles, (

@@ -271,6 +271,21 @@ def test_rf205_dispatch_cache_churn():
     assert jaxlint.audit_dispatch(steady, subject="m") == []
 
 
+def test_rf205_serve_cache_clean_and_unbucketized_mutation():
+    """The serving executable cache passes the RF205 audit with length
+    bucketing on, and the mutation — ``buckets=None``, so every distinct
+    prompt length compiles its own prefill executable — fires it."""
+    from repro.analysis import jaxlint
+
+    diags, audited = jaxlint.audit_serve_cache()
+    assert diags == []
+    assert audited == ["serve_engine[cache]"]
+
+    diags, _ = jaxlint.audit_serve_cache(buckets=None)
+    assert codes(diags) == ["RF205"]
+    assert "cache key varies" in diags[0].message
+
+
 def test_rf206_state_sized_collective_in_mesh_body():
     from jax.sharding import PartitionSpec as P
 
